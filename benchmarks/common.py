@@ -1,0 +1,88 @@
+"""Shared benchmark machinery mirroring the paper's §3 methodology.
+
+"the program iterates ten times through allocating memory, writing some
+data, checking that the data is correct when read back and then freeing
+the memory.  The average time for performing the allocations and frees
+is calculated ... the code was modified to report the average over all
+iterations, and the average over all but the first iteration"
+
+The JIT parallel holds exactly: XLA compiles on the first call the way
+SYCL JIT-compiles SPIR-V, so ``avg_all`` vs ``avg_subsequent`` is the
+same apples-to-apples split the paper added.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import HeapConfig, Ouroboros
+
+ITERS = 10
+BENCH_HEAP = HeapConfig(total_bytes=32 << 20, chunk_bytes=8 << 10,
+                        min_page_bytes=16)
+
+
+def bench_variant(variant: str, *, n_allocs: int, size_bytes: int,
+                  iters: int = ITERS, cfg: HeapConfig = BENCH_HEAP):
+    """One paper-style measurement cell.  Returns dict with avg_all /
+    avg_subsequent alloc+free µs and the data-integrity flag."""
+    ouro = Ouroboros(cfg, variant)
+    state = ouro.init()
+    jax.block_until_ready(state)
+    sizes = jnp.full(n_allocs, size_bytes, jnp.int32)
+    mask = jnp.ones(n_allocs, bool)
+    tags = jnp.arange(n_allocs, dtype=jnp.int32)
+
+    alloc_t, free_t = [], []
+    all_ok = True
+    for it in range(iters):
+        t0 = time.perf_counter()
+        state, offs = ouro.alloc(state, sizes, mask)
+        jax.block_until_ready(offs)
+        alloc_t.append(time.perf_counter() - t0)
+
+        state = ouro.write_pattern(state, offs, sizes, tags)
+        ok = np.asarray(ouro.check_pattern(state, offs, sizes, tags))
+        granted = np.asarray(offs) >= 0
+        all_ok &= bool(ok[granted].all()) and bool(granted.any())
+
+        t0 = time.perf_counter()
+        state = ouro.free(state, offs, sizes, mask)
+        jax.block_until_ready(state)
+        free_t.append(time.perf_counter() - t0)
+
+    us = lambda ts: 1e6 * float(np.mean(ts))
+    return {
+        "variant": variant, "n": n_allocs, "size": size_bytes,
+        "alloc_us_all": us(alloc_t),
+        "alloc_us_subsequent": us(alloc_t[1:]),
+        "free_us_all": us(free_t),
+        "free_us_subsequent": us(free_t[1:]),
+        "per_alloc_ns": 1e9 * float(np.mean(alloc_t[1:])) / n_allocs,
+        "data_ok": all_ok,
+    }
+
+
+SIZE_SWEEP = (16, 64, 256, 1024, 4096, 8192)       # paper fig x-axis 1
+THREAD_SWEEP = (32, 128, 512, 1024, 4096, 8192)    # paper fig x-axis 2
+THREAD_SWEEP_CHUNK = (32, 128, 512, 1024, 2048)    # chunk walk is O(N/ppc)
+
+
+def figure_rows(variant: str, quick: bool = False):
+    """The two sweeps of one paper figure (size @1024 allocs; threads
+    @1000 B), as the paper's figs. 1-6 do per allocator."""
+    sizes = SIZE_SWEEP[::3] if quick else SIZE_SWEEP
+    is_chunk = "chunk" in variant
+    threads = (THREAD_SWEEP_CHUNK if is_chunk else THREAD_SWEEP)
+    threads = threads[::3] if quick else threads
+    rows = []
+    for s in sizes:
+        rows.append(bench_variant(variant, n_allocs=1024 if not quick
+                                  else 256, size_bytes=s))
+    for n in threads:
+        rows.append(bench_variant(variant, n_allocs=n, size_bytes=1000))
+    return rows

@@ -1,0 +1,11 @@
+"""Virtualized-array page allocator (paper fig. 3): average subsequent allocation time as a function of
+allocation size (1024 simultaneous allocations) and of the number of
+simultaneous allocations (1000 B) — TPU-adapted per DESIGN.md §2 (the
+"simultaneous threads" axis is the bulk-transaction lane count)."""
+from benchmarks.common import figure_rows
+
+VARIANT = "va_page"
+
+
+def run(quick: bool = False):
+    return figure_rows(VARIANT, quick=quick)

@@ -1,0 +1,123 @@
+"""Roofline-term derivation from the dry-run artifacts (§Roofline).
+
+    compute term    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory term     = HLO_bytes / (chips × HBM_bw)
+    collective term = collective_bytes / (chips × link_bw)
+
+cost_analysis() on the SPMD-partitioned module is *per device*, so the
+per-chip forms used here are algebraically identical (global = per-dev
+× chips).  Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Spec formula: 6·N·D (dense) / 6·N_active·D (MoE) for training;
+    2·N·D for inference kinds (no backward)."""
+    from repro.configs import SHAPES, get_arch
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def analyse(rec: dict) -> dict:
+    chips = rec["devices"]
+    flops_dev = rec["cost"]["flops"]
+    bytes_dev = rec["cost"]["bytes"]
+    # recompute the total from per-kind values clamped at 0: early
+    # records predate the probe-unit clamp and a negative per-layer
+    # all-reduce unit could understate the stored total.
+    kinds = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+    coll_dev = sum(max(rec["collectives"].get(k, 0), 0) for k in kinds)
+    mem = rec.get("memory", {})
+    t_compute = flops_dev / PEAK_FLOPS
+    # Spec formula: HLO "bytes accessed".  This counts every operand of
+    # every op as if it crossed HBM — VMEM-resident reuse (fusion,
+    # flash blocks, scan carries) is billed repeatedly, so it
+    # overestimates traffic by ~5-20×.  We report it AND a realistic
+    # HBM-crossing estimate from buffer sizes: arguments read + outputs
+    # written + temps written-and-read once each.
+    t_memory_hlo = bytes_dev / HBM_BW
+    traffic = (mem.get("argument_bytes", 0) + mem.get("output_bytes", 0)
+               + 2 * mem.get("temp_bytes", 0))
+    t_memory = traffic / HBM_BW
+    t_coll = coll_dev / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"])
+    hlo_global = flops_dev * chips
+    bound = max(terms.values())
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "tag": rec.get("tag", ""),
+        "t_compute_s": t_compute, "t_memory_hlo_s": t_memory_hlo,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dom,
+        "model_flops": mf, "hlo_flops_global": hlo_global,
+        "useful_ratio": mf / hlo_global if hlo_global else 0.0,
+        # fraction of roofline: ideal(=model-flops compute time) / actual
+        "roofline_fraction": (mf / chips / PEAK_FLOPS) / bound
+        if bound else 0.0,
+        "peak_gib": mem.get("peak_bytes", 0) / 2**30,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    rows = []
+    for f in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
+        rec = json.load(open(f))
+        if not rec.get("ok") or "cost" not in rec:
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": rec["mesh"], "error": rec.get("error")})
+            continue
+        rows.append(analyse(rec))
+    if args.markdown:
+        hdr = ("| arch | shape | mesh | tag | compute s | mem(hlo) s | "
+               "mem(hbm) s | collective s | dominant | useful | roofline "
+               "| peak GiB |")
+        print(hdr)
+        print("|" + "---|" * 12)
+        for r in rows:
+            if "error" in r:
+                print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | | "
+                      f"ERROR: {str(r['error'])[:60]} | | | | | | | |")
+                continue
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                  f"| {r['tag']} "
+                  f"| {r['t_compute_s']:.4f} | {r['t_memory_hlo_s']:.3f} "
+                  f"| {r['t_memory_s']:.4f} "
+                  f"| {r['t_collective_s']:.4f} | {r['dominant']} "
+                  f"| {r['useful_ratio']:.2f} | {r['roofline_fraction']:.2f} "
+                  f"| {r['peak_gib']:.1f} |")
+    else:
+        for r in rows:
+            print(json.dumps(r))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Benchmark harness entry: one module per paper figure (figs. 1-6).
+
+Prints ``name,us_per_call,derived`` CSV as mandated — ``us_per_call`` is
+the paper's headline metric (average subsequent allocation time), and
+``derived`` carries the full methodology split (avg-all vs
+avg-subsequent, free time, per-alloc ns, data-integrity check).
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--fig fig1_page]
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+
+FIGS = ["fig1_page", "fig2_chunk", "fig3_va_page", "fig4_vl_page",
+        "fig5_va_chunk", "fig6_vl_chunk"]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced grid (CI)")
+    ap.add_argument("--fig", action="append", default=None,
+                    help="run only the named figure module(s)")
+    args = ap.parse_args(argv)
+    figs = args.fig or FIGS
+
+    print("name,us_per_call,derived")
+    for fig in figs:
+        mod = importlib.import_module(f"benchmarks.{fig}")
+        for row in mod.run(quick=args.quick):
+            name = (f"{fig}/{row['variant']}"
+                    f"/n{row['n']}/s{row['size']}")
+            derived = (f"alloc_all={row['alloc_us_all']:.0f}us "
+                       f"alloc_sub={row['alloc_us_subsequent']:.0f}us "
+                       f"free_sub={row['free_us_subsequent']:.0f}us "
+                       f"per_alloc={row['per_alloc_ns']:.0f}ns "
+                       f"data_ok={row['data_ok']}")
+            print(f"{name},{row['alloc_us_subsequent']:.1f},{derived}",
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""End-to-end example: serve a small LM with continuous batching over
+the Ouroboros paged KV cache — requests of mixed lengths stream through
+the allocator (alloc on growth, free on completion).
+
+    PYTHONPATH=src python examples/serve_paged.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+import jax
+
+from repro.configs import get_arch
+from repro.models.model import build_model
+from repro.serve.engine import ServingEngine
+
+cfg = get_arch("qwen2-0.5b").smoke()
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+
+eng = ServingEngine(model, params, max_batch=4, max_seq=256)
+rng = np.random.default_rng(0)
+
+# 12 requests with wildly mixed prompt/output lengths — the dynamic
+# partitioning workload the paper motivates (§1).
+for i in range(12):
+    plen = int(rng.integers(4, 60))
+    eng.submit(rng.integers(2, cfg.vocab_size, plen),
+               max_new_tokens=int(rng.integers(4, 24)))
+
+done = eng.run_until_done()
+for r in sorted(done, key=lambda r: r.uid):
+    print(f"req {r.uid:2d}: prompt {len(r.prompt):2d} tok "
+          f"→ generated {len(r.out_tokens):2d} tok")
+print(f"\nallocator: {eng.stats['allocs']} pages allocated, "
+      f"{eng.stats['frees']} freed, "
+      f"{eng.stats['alloc_failures']} failures over "
+      f"{eng.stats['steps']} engine steps")
+assert eng.stats["allocs"] == eng.stats["frees"], "page leak!"
+print("no page leaks — every allocation returned to the heap")

@@ -1,0 +1,104 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline / §Perf-variants tables
+from experiments/dryrun/*.json.  The narrative sections are maintained
+by hand in EXPERIMENTS.md; this prints markdown to paste/update.
+
+    PYTHONPATH=src python scripts/render_experiments.py [--section all]
+"""
+import argparse
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+from benchmarks.roofline import analyse  # noqa: E402
+
+
+def load(tagged=False):
+    rows = []
+    for f in sorted(glob.glob("experiments/dryrun/*.json")):
+        r = json.load(open(f))
+        if bool(r.get("tag")) != tagged:
+            continue
+        rows.append(r)
+    return rows
+
+
+def dryrun_table():
+    print("### Cell × mesh status (baseline configs)\n")
+    print("| arch | shape | 16×16 | peak GiB | compile s | "
+          "2×16×16 | peak GiB |")
+    print("|" + "---|" * 7)
+    recs = {}
+    for r in load():
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    seen = sorted({(r["arch"], r["shape"]) for r in load()})
+    for arch, shape in seen:
+        a = recs.get((arch, shape, "pod16x16"))
+        b = recs.get((arch, shape, "pod2x16x16"))
+        fmt = lambda r: ("✓" if r and r.get("ok") else "✗",
+                         f"{r['memory']['peak_bytes']/2**30:.1f}"
+                         if r and r.get("ok") else "—",
+                         f"{r.get('compile_s', 0)}" if r and r.get("ok")
+                         else "—")
+        sa, pa, ca = fmt(a)
+        sb, pb, _ = fmt(b)
+        print(f"| {arch} | {shape} | {sa} | {pa} | {ca} | {sb} | {pb} |")
+
+
+def roofline_table():
+    print("| arch | shape | compute s | mem(hlo) s | mem(hbm) s | "
+          "coll s | dominant | useful | roofline | peak GiB |")
+    print("|" + "---|" * 10)
+    for r in load():
+        if r["mesh"] != "pod16x16" or not r.get("ok"):
+            continue
+        a = analyse(r)
+        print(f"| {a['arch']} | {a['shape']} "
+              f"| {a['t_compute_s']:.4f} | {a['t_memory_hlo_s']:.3f} "
+              f"| {a['t_memory_s']:.4f} | {a['t_collective_s']:.4f} "
+              f"| {a['dominant']} | {a['useful_ratio']:.2f} "
+              f"| {a['roofline_fraction']:.2f} | {a['peak_gib']:.1f} |")
+
+
+def perf_table():
+    print("| arch | shape | tag | compute s | mem(hbm) s | coll s | "
+          "roofline | peak GiB |")
+    print("|" + "---|" * 8)
+    base = {}
+    for r in load():
+        if r["mesh"] == "pod16x16" and r.get("ok"):
+            base[(r["arch"], r["shape"])] = r
+    rows = []
+    for r in load(tagged=True):
+        if r["mesh"] != "pod16x16":
+            continue
+        rows.append(r)
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["tag"])):
+        if not r.get("ok"):
+            print(f"| {r['arch']} | {r['shape']} | {r['tag']} | "
+                  f"ERROR {str(r.get('error'))[:40]} | | | | |")
+            continue
+        a = analyse(r)
+        print(f"| {a['arch']} | {a['shape']} | {a['tag']} "
+              f"| {a['t_compute_s']:.4f} | {a['t_memory_s']:.4f} "
+              f"| {a['t_collective_s']:.4f} "
+              f"| {a['roofline_fraction']:.2f} | {a['peak_gib']:.1f} |")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--section", default="all",
+                    choices=("all", "dryrun", "roofline", "perf"))
+    args = ap.parse_args()
+    if args.section in ("all", "dryrun"):
+        print("\n## §Dry-run\n")
+        dryrun_table()
+    if args.section in ("all", "roofline"):
+        print("\n## §Roofline (single-pod baselines)\n")
+        roofline_table()
+    if args.section in ("all", "perf"):
+        print("\n## §Perf variants (tagged runs)\n")
+        perf_table()

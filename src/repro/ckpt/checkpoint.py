@@ -1,0 +1,131 @@
+"""Sharded, atomic, async checkpointing with keep-k retention.
+
+Layout:   <dir>/step_<N>/<flat.leaf.path>.npy  +  meta.json
+Atomicity: written into ``step_<N>.tmp`` then os.replace()'d — a crash
+mid-save never corrupts the latest checkpoint (restore scans only
+committed dirs).  ``save_async`` snapshots to host memory synchronously
+(device buffers stay consistent) and writes on a daemon thread so the
+step loop keeps running.  Restore can re-shard onto a different mesh:
+pass target shardings and each leaf is device_put accordingly — the
+elastic-rescale path (ft/runtime.py) reuses this.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_SEP = "|"
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+def save(state, directory: str, step: int, keep: int = 3) -> str:
+    """Synchronous atomic save.  Returns the committed path."""
+    flat, _ = _flatten(state)
+    host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()
+            if v is not None}
+    return _write(host, directory, step, keep)
+
+
+def _write(host, directory, step, keep):
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    meta = {"step": step, "leaves": {}}
+    for k, v in host.items():
+        fn = re.sub(r"[^A-Za-z0-9_.|-]", "_", k) + ".npy"
+        np.save(os.path.join(tmp, fn), v)
+        meta["leaves"][k] = {"file": fn, "shape": list(v.shape),
+                             "dtype": str(v.dtype)}
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    _retain(directory, keep)
+    return final
+
+
+def _retain(directory, keep):
+    steps = sorted(d for d in os.listdir(directory)
+                   if re.fullmatch(r"step_\d{8}", d))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+
+
+class AsyncCheckpointer:
+    """Snapshot synchronously, write on a daemon thread."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    def save(self, state, step: int):
+        self.wait()
+        flat, _ = _flatten(state)
+        host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()
+                if v is not None}
+        self._thread = threading.Thread(
+            target=_write, args=(host, self.directory, step, self.keep),
+            daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if re.fullmatch(r"step_\d{8}", d)]
+    return max(steps) if steps else None
+
+
+def restore(template: Any, directory: str,
+            step: Optional[int] = None, shardings: Any = None):
+    """Restore into the structure of ``template`` (None leaves stay
+    None).  ``shardings``: optional matching pytree of NamedShardings —
+    the re-shard-on-restore path for elastic rescale."""
+    step = latest_step(directory) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {directory}")
+    d = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(d, "meta.json")) as f:
+        meta = json.load(f)
+
+    flat, treedef = _flatten(template)
+    shard_flat = (_flatten(shardings)[0] if shardings is not None else {})
+    out = {}
+    for k, leaf in flat.items():
+        if leaf is None:
+            out[k] = None
+            continue
+        info = meta["leaves"][k]
+        arr = np.load(os.path.join(d, info["file"]))
+        sh = shard_flat.get(k)
+        out[k] = jax.device_put(arr, sh) if sh is not None else \
+            jax.numpy.asarray(arr)
+    leaves = [out[k] for k in flat.keys()]
+    return jax.tree_util.tree_unflatten(treedef, leaves), step

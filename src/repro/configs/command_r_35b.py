@@ -1,0 +1,20 @@
+"""Command-R 35B — dense LM, parallel attn+FFN block, layernorm, no bias
+[hf:CohereForAI/c4ai-command-r-v01; unverified]."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="command-r-35b",
+    family="dense",
+    num_layers=40,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=22528,
+    vocab_size=256000,
+    head_dim=128,
+    norm="layernorm",
+    parallel_block=True,
+    tie_embeddings=True,
+    rope_theta=8e6,
+    source="[hf:CohereForAI/c4ai-command-r-v01; unverified]",
+))

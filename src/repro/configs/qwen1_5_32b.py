@@ -1,0 +1,17 @@
+"""Qwen1.5-32B — dense decoder LM with QKV bias [hf:Qwen/Qwen1.5-0.5B; hf]."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="qwen1.5-32b",
+    family="dense",
+    num_layers=64,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=40,
+    d_ff=27392,
+    vocab_size=152064,
+    head_dim=128,
+    qkv_bias=True,
+    rope_theta=1e6,
+    source="[hf:Qwen/Qwen1.5-0.5B; hf]",
+))

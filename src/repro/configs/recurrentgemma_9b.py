@@ -1,0 +1,22 @@
+"""RecurrentGemma-9B (Griffin) — RG-LRU + local attention, 1 attention
+block per 3 [arXiv:2402.19427; unverified].  Sub-quadratic: runs
+long_500k (RG-LRU state is O(1); local attention window-bounded)."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    num_layers=38,
+    d_model=4096,
+    num_heads=16,
+    num_kv_heads=1,
+    d_ff=12288,
+    vocab_size=256000,
+    head_dim=256,
+    act="gelu",
+    rope_theta=1e4,
+    lru_width=4096,
+    attn_period=3,
+    local_window=2048,
+    source="[arXiv:2402.19427; unverified]",
+))

@@ -1,0 +1,9 @@
+"""Ouroboros-TPU core: dynamic memory management as functional JAX.
+
+The paper's contribution (Standish 2025 / Winter et al. ICS'20) lives
+here — see DESIGN.md §1-2 for the GPU→TPU mechanism mapping.
+"""
+from repro.core.heap import HeapConfig
+from repro.core.ouroboros import Ouroboros, VARIANTS
+
+__all__ = ["HeapConfig", "Ouroboros", "VARIANTS"]

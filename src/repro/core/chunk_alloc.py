@@ -1,0 +1,230 @@
+"""Chunk allocator (paper §4.2, fig. 2) over any queue family.
+
+"The chunk allocator maintains queues of chunks that have free pages,
+first obtaining a chunk index, then scanning the chunk for free pages.
+It is a more complex algorithm, but queue sizes are smaller."
+
+Queues hold *chunk ids*; every chunk carries a page-occupancy bitmap.
+Allocation pops a chunk from the class queue (or claims a fresh chunk
+from the pool), rank-selects free bits from its bitmap, and re-enqueues
+the chunk if pages remain.  Freeing clears bits and re-enqueues chunks
+on their full→non-full transition.
+
+Deviation from GPU Ouroboros (documented in DESIGN.md §6): a chunk stays
+bound to its size class once claimed; GPU Ouroboros can reflag an
+emptied chunk back to the global pool mid-queue, which requires the
+lock-free flag dance we have no atomics for.  `compact()` on the host
+rebuilds the binding (used by the serving engine between batches).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import groups, queues
+from repro.core.heap import HeapConfig, size_to_class_device
+from repro.core.page_alloc import AllocState
+
+
+class ChunkMeta(NamedTuple):
+    bitmap: Any       # (num_chunks, bitmap_words) uint32, 1 = page in use
+    free_count: Any   # (num_chunks,) int32
+    chunk_class: Any  # (num_chunks,) int32, -1 = unbound
+
+
+def init(cfg: HeapConfig, family_name: str) -> AllocState:
+    C = cfg.num_classes
+    ctx = queues.AllocCtx(heap=jnp.zeros(cfg.total_words, jnp.int32),
+                          pool=queues.pool_init(cfg))
+    if family_name == "ring":
+        q = queues.ring_init(C, cfg.num_chunks)
+    else:
+        q, ctx = queues.virt_init(cfg, ctx, C, cfg.num_chunks, family_name)
+    meta = ChunkMeta(
+        bitmap=jnp.zeros((cfg.num_chunks, cfg.bitmap_words_per_chunk),
+                         jnp.uint32),
+        free_count=jnp.zeros(cfg.num_chunks, jnp.int32),
+        chunk_class=jnp.full(cfg.num_chunks, -1, jnp.int32),
+    )
+    return AllocState(q=q, ctx=ctx, meta=meta)
+
+
+def _expand_bitmap(row, nbits):
+    """(bitmap_words,) uint32 → (nbits,) bool of per-page occupancy."""
+    bits = (row[:, None] >> jnp.arange(32, dtype=jnp.uint32)[None, :]) & 1
+    return bits.reshape(-1)[:nbits].astype(bool)
+
+
+def _select_free_pages(row, ppc, take):
+    """Rank-select: indices of the first ``take`` free pages of a chunk.
+
+    The pure-jnp form of the ``bitmap_select`` Pallas kernel (kernels/
+    bitmap_select.py is the tiled version for big bitmaps).
+    Returns (page_idx (maxppc,), valid (maxppc,)) padded arrays.
+    """
+    occupied = _expand_bitmap(row, row.shape[0] * 32)
+    in_range = jnp.arange(occupied.shape[0]) < ppc
+    free = (~occupied) & in_range
+    order = jnp.cumsum(free.astype(jnp.int32)) - free.astype(jnp.int32)
+    chosen = free & (order < take)
+    page_idx = jnp.nonzero(chosen, size=occupied.shape[0], fill_value=-1)[0]
+    valid = page_idx >= 0
+    return page_idx.astype(jnp.int32), valid
+
+
+def _set_bits(meta: ChunkMeta, chunk, page_idx, valid, delta_sign):
+    """Set (+1) or clear (−1) unique page bits via scatter-add.
+
+    Bits are unique per (chunk, page) and in the opposite state, so
+    add/subtract of the bit value equals OR/AND-NOT (double-free is UB,
+    as in the C original)."""
+    word = page_idx // 32
+    bitval = (jnp.uint32(1) << (page_idx % 32).astype(jnp.uint32))
+    signed = jnp.where(delta_sign > 0, bitval, jnp.uint32(0) - bitval)
+    ch = jnp.where(valid, chunk, meta.bitmap.shape[0])
+    bitmap = meta.bitmap.at[ch, word].add(jnp.where(valid, signed, 0),
+                                          mode="drop")
+    nfree = meta.free_count.at[ch].add(
+        jnp.where(valid, -delta_sign, 0), mode="drop")
+    return meta._replace(bitmap=bitmap, free_count=nfree)
+
+
+def alloc(cfg: HeapConfig, family_name: str, state: AllocState,
+          sizes_bytes, mask):
+    fam = queues.FAMILIES[family_name]
+    C = cfg.num_classes
+    n = sizes_bytes.shape[0]
+    maxppc = cfg.max_pages_per_chunk
+    cls = size_to_class_device(cfg, sizes_bytes)
+    valid = mask & (cls < C)
+    counts = groups.segment_counts(cls, valid, C)
+    out = jnp.full(n, -1, jnp.int32)
+
+    q, ctx, meta = state.q, state.ctx, state.meta
+    one = jnp.ones(1, bool)
+
+    for c in range(C):  # static class loop; dynamic chunk-drain inside
+        ppc = cfg.pages_per_chunk(c)
+        pw = cfg.page_words(c)
+        req_pos = jnp.nonzero(valid & (cls == c), size=n, fill_value=n)[0]
+
+        def body(carry):
+            q, ctx, meta, out, served, fail = carry
+            have_queued = fam.count(q)[c] > 0
+
+            def from_queue(op):
+                q, ctx, meta = op
+                rank = jnp.zeros(1, jnp.int32)
+                ccls = jnp.full(1, c, jnp.int32)
+                q, ctx, ch = fam.bulk_dequeue(cfg, q, ctx, ccls, rank, one)
+                return q, ctx, meta, ch[0], jnp.array(False)
+
+            def from_pool(op):
+                q, ctx, meta = op
+                has = queues.pool_count(ctx.pool) > 0
+                pool, ch = queues.pool_dequeue(cfg, ctx.pool, one & has)
+                ch = ch[0]
+                sent = meta.bitmap.shape[0]
+                idx = jnp.where(has, ch, sent)
+                bitmap = meta.bitmap.at[idx].set(jnp.uint32(0), mode="drop")
+                nfree = meta.free_count.at[idx].set(ppc, mode="drop")
+                ccls = meta.chunk_class.at[idx].set(c, mode="drop")
+                meta = ChunkMeta(bitmap, nfree, ccls)
+                return q, ctx._replace(pool=pool), meta, ch, ~has
+
+            q, ctx, meta, chunk, fail_now = jax.lax.cond(
+                have_queued, from_queue, from_pool, (q, ctx, meta))
+
+            f = jnp.where(fail_now, 0, meta.free_count[chunk])
+            t = jnp.minimum(counts[c] - served, f)
+            page_idx, sel = _select_free_pages(meta.bitmap[chunk], ppc, t)
+            meta = _set_bits(meta, chunk, page_idx, sel, +1)
+            offs = chunk * cfg.words_per_chunk + page_idx * pw
+            dst = req_pos.at[served + jnp.arange(page_idx.shape[0])].get(
+                mode="fill", fill_value=n)
+            out = out.at[jnp.where(sel, dst, n)].set(offs, mode="drop")
+
+            # chunk still has pages → back into the class queue
+            leftover = (~fail_now) & (meta.free_count[chunk] > 0)
+            ccls = jnp.full(1, c, jnp.int32)
+            q, ctx = fam.bulk_enqueue(
+                cfg, q, ctx, ccls, jnp.zeros(1, jnp.int32),
+                jnp.full(1, chunk, jnp.int32), one & leftover)
+            return q, ctx, meta, out, served + t, fail | fail_now
+
+        def cond(carry):
+            *_, served, fail = carry
+            return (served < counts[c]) & ~fail
+
+        q, ctx, meta, out, _, _ = jax.lax.while_loop(
+            cond, body, (q, ctx, meta, out, jnp.int32(0), jnp.array(False)))
+
+    return AllocState(q=q, ctx=ctx, meta=meta), out
+
+
+def free(cfg: HeapConfig, family_name: str, state: AllocState,
+         offsets_words, sizes_bytes, mask):
+    fam = queues.FAMILIES[family_name]
+    C = cfg.num_classes
+    n = offsets_words.shape[0]
+    cls = size_to_class_device(cfg, sizes_bytes)
+    valid = mask & (cls < C) & (offsets_words >= 0)
+
+    meta = state.meta
+    chunk = offsets_words // cfg.words_per_chunk
+    pw_per_cls = jnp.array([cfg.page_words(c) for c in range(C)], jnp.int32)
+    page_idx = (offsets_words % cfg.words_per_chunk) // pw_per_cls[cls % C]
+
+    old_free = meta.free_count  # snapshot before clearing
+    meta = _set_bits(meta, chunk, page_idx, valid, -1)
+
+    # full → non-full transitions re-enter the class queue.
+    touched = jnp.zeros(cfg.num_chunks, bool).at[
+        jnp.where(valid, chunk, cfg.num_chunks)].set(True, mode="drop")
+    revived = touched & (old_free == 0)
+    rev_ids = jnp.nonzero(revived, size=n, fill_value=-1)[0].astype(jnp.int32)
+    rev_ok = rev_ids >= 0
+    rev_cls = meta.chunk_class.at[rev_ids].get(mode="fill", fill_value=0)
+    rank, _ = groups.masked_rank(rev_cls, rev_ok, C)
+    q, ctx = fam.bulk_enqueue(cfg, state.q, state.ctx, rev_cls, rank,
+                              rev_ids, rev_ok)
+    return AllocState(q=q, ctx=ctx, meta=meta)
+
+
+def compact(cfg: HeapConfig, family_name: str, state: AllocState
+            ) -> AllocState:
+    """Defragmentation: rebuild queues so fully-free chunks return to
+    the pool (GPU Ouroboros does this online with flag CAS; see module
+    docstring).  jit-safe; the serving engine runs it between batches."""
+    fam = queues.FAMILIES[family_name]
+    C = cfg.num_classes
+    meta = state.meta
+    nc = cfg.num_chunks
+    ids = jnp.arange(nc, dtype=jnp.int32)
+
+    ppc_table = jnp.array([0] + [cfg.pages_per_chunk(c) for c in range(C)],
+                          jnp.int32)
+    fully_free = (meta.chunk_class >= 0) & (
+        meta.free_count == ppc_table.at[meta.chunk_class + 1].get(mode="clip"))
+    chunk_class = jnp.where(fully_free, -1, meta.chunk_class)
+    meta = meta._replace(chunk_class=chunk_class)
+
+    # Fresh pool primed with every unbound chunk, then fresh queues with
+    # every live (bound, has-free-pages) chunk re-enqueued.
+    unbound = chunk_class < 0
+    rank = groups.masked_prefix_sum(jnp.ones(nc, jnp.int32), unbound)
+    pool, _ = queues.ring_bulk_enqueue(
+        cfg, queues.ring_init(1, nc), None, jnp.zeros(nc, jnp.int32),
+        rank, ids, unbound)
+    ctx = queues.AllocCtx(heap=state.ctx.heap, pool=pool)
+
+    if family_name == "ring":
+        q = queues.ring_init(C, nc)
+    else:
+        q, ctx = queues.virt_init(cfg, ctx, C, nc, family_name)
+    live = (chunk_class >= 0) & (meta.free_count > 0)
+    rk, _ = groups.masked_rank(chunk_class, live, C)
+    q, ctx = fam.bulk_enqueue(cfg, q, ctx, chunk_class, rk, ids, live)
+    return AllocState(q=q, ctx=ctx, meta=meta)

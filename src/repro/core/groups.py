@@ -1,0 +1,66 @@
+"""Masked group operations — the TPU transplant of CUDA warp votes.
+
+The paper's central porting difficulty (§2) is that CUDA coalesces
+allocations inside a warp with *masked* vote functions
+(``__activemask()`` + ``__ballot_sync``), while SYCL group operations
+require every work-item of the sub-group to participate — the paper's
+emulation deadlocks on NVIDIA backends, and §5 explicitly calls for
+"group reduction algorithms to be masked by the active threads only".
+
+On TPU the data-parallel unit is the whole request vector, and a mask is
+just another operand — so the wished-for masked group operations exist
+natively.  These helpers are the allocator's coalescing machinery:
+``masked_rank`` is the lane-aggregated analogue of warp-aggregated
+allocation (one queue-counter update per *class*, not per request).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def masked_ballot(mask):
+    """Pack a boolean lane mask into uint32 words, LSB-first.
+
+    The analogue of ``__ballot_sync(__activemask(), pred)``: returns
+    ``ceil(N/32)`` words whose bit ``i%32`` of word ``i//32`` is lane
+    *i*'s predicate.
+    """
+    mask = mask.astype(jnp.uint32)
+    n = mask.shape[0]
+    pad = (-n) % 32
+    mask = jnp.pad(mask, (0, pad)).reshape(-1, 32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    return (mask * weights[None, :]).sum(axis=1, dtype=jnp.uint32)
+
+
+def masked_prefix_sum(x, mask):
+    """Exclusive prefix sum over active lanes only (inactive lanes: 0)."""
+    x = jnp.where(mask, x, 0)
+    return jnp.cumsum(x) - x
+
+
+def masked_rank(cls, mask, num_classes):
+    """Rank of each active lane among active lanes of the same class.
+
+    This is warp-aggregated allocation generalized to the request
+    vector: lane *i* with class *c* gets rank = number of earlier active
+    lanes with the same class.  Returns ``(rank, counts)`` where
+    ``counts[c]`` is the total number of active lanes in class ``c`` —
+    the single aggregated queue-counter delta per class.
+    """
+    cls = cls.astype(jnp.int32)
+    onehot = (cls[:, None] == jnp.arange(num_classes, dtype=jnp.int32)[None, :])
+    onehot = jnp.where(mask[:, None], onehot, False).astype(jnp.int32)
+    inc = jnp.cumsum(onehot, axis=0)
+    rank = jnp.take_along_axis(inc - onehot, cls[:, None] % num_classes,
+                               axis=1)[:, 0]
+    counts = inc[-1] if cls.shape[0] > 0 else jnp.zeros(
+        num_classes, jnp.int32)
+    return jnp.where(mask, rank, 0).astype(jnp.int32), counts.astype(jnp.int32)
+
+
+def segment_counts(cls, mask, num_classes):
+    """Per-class active-lane counts (no ranks needed)."""
+    onehot = (cls[:, None] == jnp.arange(num_classes, dtype=jnp.int32)[None, :])
+    onehot = jnp.where(mask[:, None], onehot, False)
+    return onehot.sum(axis=0, dtype=jnp.int32)

@@ -1,0 +1,132 @@
+"""Heap layout for the Ouroboros-TPU dynamic memory manager.
+
+The paper (Standish 2025, porting Ouroboros [Winter et al. ICS'20])
+pre-allocates a block of device memory (the *heap*), divides it into
+equal-sized *chunks*, and serves allocation requests as *pages* carved
+out of chunks.  Per-size-class queues hand out free pages (or chunks
+with free pages).
+
+Everything here is static layout math: the heap itself is a flat int32
+word array (1 word = 4 bytes), so offsets fit int32 and the virtualized
+queue variants can store their own queue segments *inside* heap chunks —
+the defining self-referential trait of Ouroboros.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+WORD_BYTES = 4
+
+
+def _log2i(x: int) -> int:
+    if x <= 0 or x & (x - 1):
+        raise ValueError(f"expected positive power of two, got {x}")
+    return x.bit_length() - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class HeapConfig:
+    """Static configuration of the device heap.
+
+    Defaults give an 8 MiB heap with 8 KiB chunks and size classes
+    16 B .. 8 KiB (ten classes), mirroring the paper's benchmark range
+    of allocation sizes (figs. 1-6 sweep 4 B .. 8 KiB).  The paper
+    itself notes it shrank the heap to fit the author's device; tests
+    shrink further for speed — the layout math is scale-free.
+    """
+
+    total_bytes: int = 8 << 20
+    chunk_bytes: int = 8 << 10
+    min_page_bytes: int = 16
+    # Ring capacity head-room factor for the non-virtualized queues.
+    # Virtualized variants size their directories from the same bound.
+    max_alloc_batch: int = 8192
+
+    def __post_init__(self):
+        _log2i(self.chunk_bytes)
+        _log2i(self.min_page_bytes)
+        if self.total_bytes % self.chunk_bytes:
+            raise ValueError("total_bytes must be a multiple of chunk_bytes")
+        if self.min_page_bytes < WORD_BYTES:
+            raise ValueError("min page must hold at least one word")
+
+    # ---- derived layout ----------------------------------------------------
+    @property
+    def num_chunks(self) -> int:
+        return self.total_bytes // self.chunk_bytes
+
+    @property
+    def words_per_chunk(self) -> int:
+        return self.chunk_bytes // WORD_BYTES
+
+    @property
+    def total_words(self) -> int:
+        return self.total_bytes // WORD_BYTES
+
+    @property
+    def num_classes(self) -> int:
+        """Size classes are powers of two: min_page .. chunk_bytes."""
+        return _log2i(self.chunk_bytes) - _log2i(self.min_page_bytes) + 1
+
+    def page_bytes(self, c: int) -> int:
+        return self.min_page_bytes << c
+
+    def page_words(self, c: int) -> int:
+        return self.page_bytes(c) // WORD_BYTES
+
+    def pages_per_chunk(self, c: int) -> int:
+        return self.chunk_bytes // self.page_bytes(c)
+
+    @property
+    def max_pages_per_chunk(self) -> int:
+        return self.pages_per_chunk(0)
+
+    @property
+    def bitmap_words_per_chunk(self) -> int:
+        """Occupancy bitmap words (32 pages tracked per uint32 word)."""
+        return max(1, self.max_pages_per_chunk // 32)
+
+    def size_to_class(self, size_bytes: int) -> int:
+        """Smallest size class whose page holds ``size_bytes`` (host math)."""
+        size_bytes = max(size_bytes, self.min_page_bytes)
+        c = math.ceil(math.log2(size_bytes)) - _log2i(self.min_page_bytes)
+        if c >= self.num_classes:
+            raise ValueError(
+                f"allocation of {size_bytes} B exceeds chunk size "
+                f"{self.chunk_bytes} B")
+        return c
+
+    def chunk_word_base(self, chunk_id: int) -> int:
+        return chunk_id * self.words_per_chunk
+
+
+def size_to_class_device(cfg: HeapConfig, sizes):
+    """Vectorized size→class mapping (device math, jit-safe).
+
+    ``sizes`` in bytes; returns int32 class ids.  Sizes above the chunk
+    size map to ``num_classes`` (an invalid class — callers treat it as
+    an allocation failure, matching the GPU original which returns
+    nullptr for over-large requests).
+    """
+    import jax.numpy as jnp
+
+    sizes = jnp.maximum(sizes.astype(jnp.int32), cfg.min_page_bytes)
+    # ceil(log2(s)) via bit twiddling on ints: position of MSB of (s-1)+1.
+    bits = 32 - _clz32(sizes - 1)
+    c = bits - _log2i(cfg.min_page_bytes)
+    return jnp.where(sizes > cfg.chunk_bytes, cfg.num_classes, c).astype(
+        jnp.int32)
+
+
+def _clz32(x):
+    """Count leading zeros of each int32 (x >= 0); clz(0) = 32."""
+    import jax.numpy as jnp
+
+    x = x.astype(jnp.uint32)
+    n = jnp.zeros_like(x)
+    for shift in (16, 8, 4, 2, 1):
+        mask = x <= (jnp.uint32(0xFFFFFFFF) >> shift)
+        n = jnp.where(mask, n + shift, n)
+        x = jnp.where(mask, x << shift, x)
+    return jnp.where(x == 0, jnp.uint32(32), n).astype(jnp.int32)

@@ -1,0 +1,118 @@
+"""Unified Ouroboros allocator facade — the six paper variants.
+
+Variant ids match the paper's driver programs (§3):
+
+    page      — plain ring queues of pages          (fig. 1)
+    chunk     — plain ring queues of chunks+bitmaps (fig. 2)
+    va_page   — virtualized array queue of pages    (fig. 3)
+    vl_page   — virtualized list queue of pages     (fig. 4)
+    va_chunk  — virtualized array queue of chunks   (fig. 5)
+    vl_chunk  — virtualized list queue of chunks    (fig. 6)
+
+Public API (all jit-safe, functional):
+
+    ouro = Ouroboros(cfg, "va_page")
+    state = ouro.init()
+    state, offs = ouro.alloc(state, sizes_bytes, mask)   # offs in words, -1 = fail
+    state = ouro.free(state, offs, sizes_bytes, mask)
+    heap  = write_pattern(state, offs, sizes_bytes, tag) # benchmark helpers
+    ok    = check_pattern(state, offs, sizes_bytes, tag)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import chunk_alloc, page_alloc
+from repro.core.heap import HeapConfig
+
+VARIANTS = ("page", "chunk", "va_page", "vl_page", "va_chunk", "vl_chunk")
+
+
+def _split(variant: str):
+    if variant not in VARIANTS:
+        raise ValueError(f"unknown variant {variant!r}; pick from {VARIANTS}")
+    if variant in ("page", "chunk"):
+        return variant, "ring"
+    fam, kind = variant.split("_")
+    return kind, fam
+
+
+@dataclasses.dataclass(frozen=True)
+class Ouroboros:
+    """Facade binding a HeapConfig to one of the six variants."""
+    cfg: HeapConfig
+    variant: str
+
+    def __post_init__(self):
+        _split(self.variant)
+
+    @property
+    def _impl(self):
+        kind, _ = _split(self.variant)
+        return page_alloc if kind == "page" else chunk_alloc
+
+    @property
+    def _family(self):
+        return _split(self.variant)[1]
+
+    def init(self):
+        return self._impl.init(self.cfg, self._family)
+
+    @functools.partial(jax.jit, static_argnums=0, donate_argnums=1)
+    def alloc(self, state, sizes_bytes, mask):
+        return self._impl.alloc(self.cfg, self._family, state,
+                                sizes_bytes, mask)
+
+    @functools.partial(jax.jit, static_argnums=0, donate_argnums=1)
+    def free(self, state, offsets_words, sizes_bytes, mask):
+        return self._impl.free(self.cfg, self._family, state,
+                               offsets_words, sizes_bytes, mask)
+
+    def compact(self, state):
+        if self._impl is not chunk_alloc:
+            return state
+        return chunk_alloc.compact(self.cfg, self._family, state)
+
+    # -- benchmark data path (paper §3: "writing some data, checking that
+    #    the data is correct when read back") -------------------------------
+    @functools.partial(jax.jit, static_argnums=0, donate_argnums=1)
+    def write_pattern(self, state, offsets_words, sizes_bytes, tag):
+        heap = write_words(self.cfg, state.ctx.heap, offsets_words,
+                           sizes_bytes, tag)
+        return state._replace(ctx=state.ctx._replace(heap=heap))
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def check_pattern(self, state, offsets_words, sizes_bytes, tag):
+        return check_words(self.cfg, state.ctx.heap, offsets_words,
+                           sizes_bytes, tag)
+
+
+def _word_grid(cfg: HeapConfig, offsets_words, sizes_bytes):
+    n = offsets_words.shape[0]
+    maxw = cfg.words_per_chunk  # largest page
+    nw = jnp.maximum(sizes_bytes // 4, 1).astype(jnp.int32)
+    j = jnp.arange(maxw, dtype=jnp.int32)[None, :]
+    ok = (j < nw[:, None]) & (offsets_words[:, None] >= 0)
+    words = offsets_words[:, None] + j
+    return words, ok
+
+
+def write_words(cfg, heap, offsets_words, sizes_bytes, tag):
+    """Fill each allocation with ``tag[i]`` (one distinct word per alloc)."""
+    words, ok = _word_grid(cfg, offsets_words, sizes_bytes)
+    vals = jnp.broadcast_to(tag[:, None], words.shape)
+    return heap.at[jnp.where(ok, words, heap.shape[0])].set(
+        vals, mode="drop")
+
+
+def check_words(cfg, heap, offsets_words, sizes_bytes, tag):
+    """Per-allocation bool: every word still holds its tag (detects
+    overlapping allocations — the paper's correctness check)."""
+    words, ok = _word_grid(cfg, offsets_words, sizes_bytes)
+    got = heap.at[words].get(mode="fill", fill_value=-1)
+    good = jnp.where(ok, got == tag[:, None], True)
+    return good.all(axis=1) & (offsets_words >= 0)

@@ -1,0 +1,108 @@
+"""Page allocator (paper §4.1, fig. 1) over any queue family.
+
+"The simplest allocator is the page-based allocator, where pages of
+fixed size are allocated from a queue. Total heap memory is divided
+amongst the queues, each queue managing a different page size."
+
+Init carves the data chunks evenly into per-class page inventories and
+enqueues every page offset.  ``alloc`` is a single bulk dequeue (after
+the lane-aggregated ranking), ``free`` a single bulk enqueue — the
+fastest variant, but fragmentation is fixed at init, exactly as the
+paper observes.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core import groups, queues
+from repro.core.heap import HeapConfig, size_to_class_device
+
+# When True (TPU deployments), the ring-family bulk dequeue goes through
+# the Pallas kernel (kernels/ring_window.py): per-class wrapped windows
+# are fetched with one VMEM dynamic-slice each instead of a lane gather.
+# Equivalence is asserted in tests/test_kernels.py.
+USE_PALLAS_RING = False
+
+
+class AllocState(NamedTuple):
+    q: Any                 # queue-family state
+    ctx: queues.AllocCtx   # heap words + free-chunk pool
+    meta: Any              # ChunkMeta for chunk allocators, None here
+
+
+def data_chunks_per_class(cfg: HeapConfig) -> int:
+    """Even split with one class-share held back for virtualized queue
+    segments (their worst-case need is ~share/2 chunks)."""
+    return max(1, cfg.num_chunks // (cfg.num_classes + 1))
+
+
+def init(cfg: HeapConfig, family_name: str) -> AllocState:
+    fam = queues.FAMILIES[family_name]
+    C = cfg.num_classes
+    share = data_chunks_per_class(cfg)
+    ctx = queues.AllocCtx(heap=jnp.zeros(cfg.total_words, jnp.int32),
+                          pool=queues.pool_init(cfg))
+
+    max_items = share * cfg.pages_per_chunk(0)
+    if family_name == "ring":
+        q = queues.ring_init(C, max_items)
+    else:
+        q, ctx = queues.virt_init(cfg, ctx, C, max_items, family_name)
+
+    # Claim each class's chunk share from the pool and enqueue its pages.
+    for c in range(C):
+        mask = jnp.ones(share, bool)
+        pool, chunk_ids = queues.pool_dequeue(cfg, ctx.pool, mask)
+        ctx = ctx._replace(pool=pool)
+        ppc = cfg.pages_per_chunk(c)
+        pw = cfg.page_words(c)
+        offs = (chunk_ids[:, None] * cfg.words_per_chunk
+                + jnp.arange(ppc, dtype=jnp.int32)[None, :] * pw).reshape(-1)
+        cls = jnp.full(offs.shape[0], c, jnp.int32)
+        rank = jnp.arange(offs.shape[0], dtype=jnp.int32)
+        q, ctx = fam.bulk_enqueue(cfg, q, ctx, cls, rank, offs,
+                                  jnp.ones_like(offs, bool))
+    return AllocState(q=q, ctx=ctx, meta=None)
+
+
+def alloc(cfg: HeapConfig, family_name: str, state: AllocState,
+          sizes_bytes, mask):
+    """Bulk allocation.  Returns (state, word_offsets) — offset −1 marks
+    a failed request (over-large size or exhausted inventory), matching
+    the GPU original's nullptr."""
+    fam = queues.FAMILIES[family_name]
+    C = cfg.num_classes
+    cls = size_to_class_device(cfg, sizes_bytes)
+    valid = mask & (cls < C)
+    rank, counts = groups.masked_rank(cls, valid, C)
+    avail = fam.count(state.q)
+    # Grants are the per-class rank prefix that fits current inventory;
+    # denied lanes are exactly the tail ranks so ranks stay dense.
+    grant = valid & (rank < avail[cls % C])
+    if USE_PALLAS_RING and family_name == "ring":
+        from repro.kernels import ops as kops
+        q = state.q
+        granted = jnp.minimum(counts, avail)
+        m = min(int(sizes_bytes.shape[0]), q.store.shape[1])
+        win = kops.ring_window(q.store, q.front % q.store.shape[1],
+                               granted, m=m)
+        offs = jnp.where(grant, win.at[cls % C, rank].get(
+            mode="fill", fill_value=-1), -1)
+        q = q._replace(front=q.front + granted)
+        return AllocState(q=q, ctx=state.ctx, meta=None), offs
+    q, ctx, offs = fam.bulk_dequeue(cfg, state.q, state.ctx, cls, rank, grant)
+    return AllocState(q=q, ctx=ctx, meta=None), offs
+
+
+def free(cfg: HeapConfig, family_name: str, state: AllocState,
+         offsets_words, sizes_bytes, mask):
+    fam = queues.FAMILIES[family_name]
+    C = cfg.num_classes
+    cls = size_to_class_device(cfg, sizes_bytes)
+    valid = mask & (cls < C) & (offsets_words >= 0)
+    rank, _ = groups.masked_rank(cls, valid, C)
+    q, ctx = fam.bulk_enqueue(cfg, state.q, state.ctx, cls, rank,
+                              offsets_words, valid)
+    return AllocState(q=q, ctx=ctx, meta=None)

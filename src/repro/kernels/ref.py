@@ -1,0 +1,90 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` layer).
+
+Each function is the semantic ground truth the kernels are allclose-
+tested against (tests/test_kernels.py sweeps shapes & dtypes).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ring_window_ref(store, front, counts, m):
+    """out[c, j] = store[c, (front[c]+j) % cap] for j < counts[c], else -1.
+
+    The page-allocator hot path: each class's grant is a contiguous ring
+    window (ranks are dense), so the bulk dequeue is a wrapped slice."""
+    C, cap = store.shape
+    j = jnp.arange(m, dtype=jnp.int32)[None, :]
+    pos = (front[:, None] + j) % cap
+    vals = jnp.take_along_axis(store, pos, axis=1)
+    return jnp.where(j < counts[:, None], vals, -1).astype(store.dtype)
+
+
+def bitmap_select_ref(words, k):
+    """Dense rank-select over a bitmap: for each bit position, its rank
+    among set bits if that rank < k, else -1.  (words: (W,) uint32)."""
+    bits = ((words[:, None] >> jnp.arange(32, dtype=jnp.uint32)[None, :]) & 1
+            ).reshape(-1).astype(jnp.int32)
+    rank = jnp.cumsum(bits) - bits
+    sel = (bits == 1) & (rank < k)
+    return jnp.where(sel, rank, -1).astype(jnp.int32)
+
+
+def paged_attention_ref(q, k_pages, v_pages, page_table, seq_lens):
+    """Decode attention over a paged KV heap.
+
+    q:          (B, Hq, D)
+    k_pages:    (NP, page, Hkv, D)   — allocator-managed page heap
+    v_pages:    (NP, page, Hkv, D)
+    page_table: (B, P) int32         — page ids per sequence, -1 = unused
+    seq_lens:   (B,) int32           — tokens in cache per sequence
+    returns:    (B, Hq, D) float32
+    """
+    B, Hq, D = q.shape
+    NP, page, Hkv, _ = k_pages.shape
+    P = page_table.shape[1]
+    G = Hq // Hkv
+
+    pt = jnp.where(page_table >= 0, page_table, 0)
+    k = k_pages[pt]  # (B, P, page, Hkv, D)
+    v = v_pages[pt]
+    k = k.reshape(B, P * page, Hkv, D).astype(jnp.float32)
+    v = v.reshape(B, P * page, Hkv, D).astype(jnp.float32)
+
+    qf = q.reshape(B, Hkv, G, D).astype(jnp.float32)
+    scores = jnp.einsum("bhgd,bthd->bhgt", qf, k) / jnp.sqrt(D)
+    t = jnp.arange(P * page, dtype=jnp.int32)[None, :]
+    valid = (t < seq_lens[:, None]) & (page_table >= 0).repeat(page, axis=1)
+    scores = jnp.where(valid[:, None, None, :], scores, -jnp.inf)
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p / (p.sum(axis=-1, keepdims=True) + 1e-30)
+    out = jnp.einsum("bhgt,bthd->bhgd", p, v)
+    return out.reshape(B, Hq, D)
+
+
+def ssd_ref(x, dt, a, b, c, h0=None):
+    """Mamba-2 SSD, naive sequential recurrence (the oracle).
+
+    x:  (B, L, H, P)  — inputs per head
+    dt: (B, L, H)     — positive step sizes
+    a:  (H,)          — negative decay rates (A = -exp(a_log))
+    b:  (B, L, G, N)  — input projection (G groups, H % G == 0)
+    c:  (B, L, G, N)  — output projection
+    h0: (B, H, P, N)  — optional initial state
+    returns: y (B, L, H, P), h_final (B, H, P, N)
+    """
+    B, L, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    rep = H // G
+    bh = jnp.repeat(b, rep, axis=2)  # (B, L, H, N)
+    ch = jnp.repeat(c, rep, axis=2)
+    h = (jnp.zeros((B, H, P, N), jnp.float32) if h0 is None
+         else h0.astype(jnp.float32))
+    ys = []
+    for t in range(L):
+        decay = jnp.exp(dt[:, t] * a[None, :])  # (B, H)
+        h = (h * decay[:, :, None, None]
+             + (dt[:, t, :, None] * x[:, t]).astype(jnp.float32)[..., None]
+             * bh[:, t, :, None, :].astype(jnp.float32))
+        ys.append(jnp.einsum("bhpn,bhn->bhp", h, ch[:, t].astype(jnp.float32)))
+    return jnp.stack(ys, axis=1), h

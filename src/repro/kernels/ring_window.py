@@ -1,0 +1,50 @@
+"""Pallas kernel: ring-buffer window gather (the page-alloc hot path).
+
+Because lane-aggregated grants are rank-dense per class (DESIGN.md §2),
+a bulk dequeue of ``counts[c]`` pages is a *contiguous* window of the
+class's ring starting at ``front[c]`` — so the TPU formulation needs no
+scatter/gather at all: one wrapped dynamic slice per class row, staged
+through VMEM.  ``front``/``counts`` ride in as scalar prefetch so the
+slice start is known before the DMA.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(front_ref, counts_ref, store_ref, out_ref):
+    c = pl.program_id(0)
+    m = out_ref.shape[1]
+    row = store_ref[0, :]
+    # Double the row in VMEM so any wrapped window is one dynamic slice.
+    padded = jnp.concatenate([row, row[:m]])
+    cap = row.shape[0]
+    start = front_ref[c] % cap
+    win = jax.lax.dynamic_slice(padded, (start,), (m,))
+    j = jax.lax.broadcasted_iota(jnp.int32, (1, m), 1)
+    out_ref[...] = jnp.where(j < counts_ref[c], win[None, :], -1)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "interpret"))
+def ring_window(store, front, counts, *, m: int, interpret: bool = False):
+    """out[c, j] = store[c, (front[c]+j) % cap] for j < counts[c] else -1."""
+    C, cap = store.shape
+    if m > cap:
+        raise ValueError(f"window {m} exceeds ring capacity {cap}")
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(C,),
+        in_specs=[pl.BlockSpec((1, cap), lambda c, f, n: (c, 0))],
+        out_specs=pl.BlockSpec((1, m), lambda c, f, n: (c, 0)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((C, m), store.dtype),
+        interpret=interpret,
+    )(front.astype(jnp.int32), counts.astype(jnp.int32), store)

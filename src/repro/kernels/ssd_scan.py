@@ -1,0 +1,107 @@
+"""Pallas kernel: Mamba-2 SSD chunked scan (state-space duality).
+
+The assigned mamba2-780m architecture's hot spot.  The chunked dual
+form turns the sequential SSM recurrence into MXU-friendly matmuls:
+within a chunk of Q tokens the output is a masked (Q, Q) "attention"
+against decay weights; across chunks a (P, N) state is carried in VMEM
+scratch through the sequential innermost grid dimension.
+
+All decay exponents are non-positive (a < 0, dt > 0) so every exp() is
+≤ 1 — numerically safe in f32 accumulation regardless of input dtype.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, h0_ref,
+            y_ref, hout_ref, h_ref):
+    i = pl.program_id(2)
+    nchunks = pl.num_programs(2)
+    q = x_ref.shape[1]
+
+    @pl.when(i == 0)
+    def _init():
+        h_ref[...] = h0_ref[0, 0].astype(jnp.float32)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)    # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)     # (Q,)
+    a = a_ref[0, 0].astype(jnp.float32)          # scalar
+    bm = b_ref[0, :, 0, :].astype(jnp.float32)   # (Q, N)
+    cm = c_ref[0, :, 0, :].astype(jnp.float32)   # (Q, N)
+
+    dta = dt * a
+    cum = jnp.cumsum(dta)                        # (Q,)
+    # intra-chunk: y_i += sum_{j<=i} exp(cum_i - cum_j) dt_j (C_i.B_j) x_j
+    row = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    decay = jnp.exp(cum[:, None] - cum[None, :])
+    w = jnp.where(row >= col, decay, 0.0)
+    cb = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    y = jax.lax.dot((cb * w) * dt[None, :], x,
+                    preferred_element_type=jnp.float32)
+    # inter-chunk: y_i += exp(cum_i) C_i^T h_in
+    h = h_ref[...]                               # (P, N)
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        cm, h, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    y_ref[...] = y[None, :, None, :]
+    # state: h_out = exp(cum_Q) h_in + sum_j exp(cum_Q - cum_j) dt_j x_j b_j^T
+    wj = jnp.exp(cum[-1] - cum) * dt             # (Q,)
+    h_ref[...] = jnp.exp(cum[-1]) * h + jax.lax.dot_general(
+        x * wj[:, None], bm, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(i == nchunks - 1)
+    def _emit():
+        hout_ref[...] = h_ref[...][None, None]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, a, b, c, h0=None, *, chunk: int = 64,
+             interpret: bool = False):
+    """x: (B, L, H, P); dt: (B, L, H); a: (H,); b, c: (B, L, G, N);
+    h0: (B, H, P, N) or None.  Returns (y (B, L, H, P) f32,
+    h_final (B, H, P, N) f32)."""
+    B, L, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    rep = H // G
+    if L % chunk:
+        raise ValueError(f"L={L} not a multiple of chunk={chunk}")
+    if h0 is None:
+        h0 = jnp.zeros((B, H, P, N), jnp.float32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=0,
+        grid=(B, H, L // chunk),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda bi, h, i: (bi, i, h, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda bi, h, i: (bi, i, h)),
+            pl.BlockSpec((1, 1), lambda bi, h, i: (h, 0)),
+            pl.BlockSpec((1, chunk, 1, N),
+                         lambda bi, h, i: (bi, i, h // rep, 0)),
+            pl.BlockSpec((1, chunk, 1, N),
+                         lambda bi, h, i: (bi, i, h // rep, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda bi, h, i: (bi, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda bi, h, i: (bi, i, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda bi, h, i: (bi, h, 0, 0)),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+    )
+    y, hf = pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, L, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt, a.reshape(H, 1), b, c, h0)
+    return y, hf

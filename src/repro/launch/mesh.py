@@ -1,0 +1,21 @@
+"""Production mesh construction.
+
+Functions (not module-level constants) so importing never touches jax
+device state — the dry-run must set XLA_FLAGS before first jax init.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips/pod (v5e pod); 2 pods over DCN when multi_pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever this process actually has (tests / examples): 1D data."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

@@ -1,0 +1,81 @@
+"""Parameter-spec system: one source of truth for shape, init and
+logical sharding axes.
+
+Modules declare pytrees of ``Spec``; ``materialize`` turns them into
+arrays (deterministic per-leaf PRNG via path folding) and
+``logical_axes`` extracts the matching pytree of logical-axis tuples
+that parallel/sharding.py maps onto the mesh.  The dry-run never
+materializes — it uses ``abstract`` (ShapeDtypeStruct only).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Spec(NamedTuple):
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]  # logical axis names, len == ndim
+    init: str = "normal"             # normal | zeros | ones | small
+    scale: float = 1.0
+    dtype: object = jnp.float32
+
+
+def _is_spec(x):
+    return isinstance(x, Spec)
+
+
+def _leaf_key(key, path):
+    # zlib.crc32, not hash(): python string hashing is randomized per
+    # process, which would make init non-reproducible across runs.
+    import zlib
+    name = "/".join(str(p) for p in path)
+    return jax.random.fold_in(key, zlib.crc32(name.encode()) % (2**31))
+
+
+def materialize(specs, key):
+    def make(path, s: Spec):
+        if s.init == "zeros":
+            return jnp.zeros(s.shape, s.dtype)
+        if s.init == "ones":
+            return jnp.ones(s.shape, s.dtype)
+        if s.init == "const":
+            return jnp.full(s.shape, s.scale, s.dtype)
+        k = _leaf_key(key, path)
+        fan_in = s.shape[0] if len(s.shape) > 1 else max(s.shape[-1], 1)
+        std = s.scale / (fan_in ** 0.5)
+        return (jax.random.normal(k, s.shape, jnp.float32) * std).astype(
+            s.dtype)
+    return jax.tree_util.tree_map_with_path(make, specs,
+                                            is_leaf=_is_spec)
+
+
+def abstract(specs):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs,
+        is_leaf=_is_spec)
+
+
+def logical_axes(specs):
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=_is_spec)
+
+
+def stack(specs, n: int):
+    """Prepend a scanned 'layers' dimension to every spec in the tree."""
+    return jax.tree.map(
+        lambda s: Spec((n,) + s.shape, ("layers",) + s.axes, s.init,
+                       s.scale, s.dtype),
+        specs, is_leaf=_is_spec)
+
+
+def param_bytes(specs) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=_is_spec)
+    total = 0
+    for s in leaves:
+        n = 1
+        for d in s.shape:
+            n *= d
+        total += n * jnp.dtype(s.dtype).itemsize
+    return total

@@ -1,0 +1,82 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin) for the hybrid arch.
+
+Griffin's recurrent temporal-mixing block: two input branches — a GeLU
+gate and a (causal conv → RG-LRU) stream — merged multiplicatively and
+projected out.  The RG-LRU recurrence
+
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ x_t),
+    a_t = exp(c · r_t · log_a),  log_a = −softplus(Λ)
+
+is a first-order linear recurrence, so training/prefill uses
+``jax.lax.associative_scan`` (O(log S) depth, TPU-friendly); decode is
+the O(1) step.  The hybrid stack runs this for 2 of every 3 layers.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import Spec
+
+_C = 8.0
+
+
+def rglru_specs(cfg: ModelConfig):
+    d = cfg.d_model
+    r = cfg.lru_width or d
+    return {
+        "w_gate_branch": Spec((d, r), ("embed", "mlp")),
+        "w_rec_branch": Spec((d, r), ("embed", "mlp")),
+        "conv_w": Spec((4, r), (None, "mlp"), scale=1.0 / math.sqrt(4)),
+        "conv_b": Spec((r,), ("mlp",), "zeros"),
+        "w_input_gate": Spec((r, r), ("mlp", None)),
+        "w_rec_gate": Spec((r, r), ("mlp", None)),
+        "lambda_p": Spec((r,), ("mlp",), "const", scale=1.0),
+        "w_out": Spec((r, d), ("mlp", "embed")),
+    }
+
+
+def _conv(x, w, b, state=None):
+    width = w.shape[0]
+    ctx = (jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+           if state is None else state.astype(x.dtype))
+    xp = jnp.concatenate([ctx, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+            for i in range(width))
+    return y + b[None, None, :], xp[:, -(width - 1):, :]
+
+
+def apply_rglru_layer(cfg: ModelConfig, p, x, cache=None):
+    """x: (B, S, D); cache: None or (h (B, R) f32, conv_state).
+    Returns (y (B, S, D), new_cache)."""
+    B, S, D = x.shape
+    gate = jax.nn.gelu(x @ p["w_gate_branch"].astype(x.dtype))
+    u = x @ p["w_rec_branch"].astype(x.dtype)
+    conv_state = None if cache is None else cache[1]
+    u, new_conv = _conv(u, p["conv_w"].astype(x.dtype),
+                        p["conv_b"].astype(x.dtype), conv_state)
+
+    uf = u.astype(jnp.float32)
+    r_t = jax.nn.sigmoid(uf @ p["w_rec_gate"].astype(jnp.float32))
+    i_t = jax.nn.sigmoid(uf @ p["w_input_gate"].astype(jnp.float32))
+    log_a = -jax.nn.softplus(p["lambda_p"].astype(jnp.float32))
+    a_t = jnp.exp(_C * r_t * log_a[None, None, :])          # (B, S, R)
+    b_t = jnp.sqrt(jnp.maximum(1.0 - a_t ** 2, 1e-12)) * (i_t * uf)
+
+    if cache is None:
+        def combine(lhs, rhs):
+            a1, b1 = lhs
+            a2, b2 = rhs
+            return a2 * a1, a2 * b1 + b2
+        _, h = jax.lax.associative_scan(combine, (a_t, b_t), axis=1)
+        h_last = h[:, -1]
+    else:
+        h0 = cache[0]
+        h = (a_t[:, 0] * h0 + b_t[:, 0])[:, None]
+        h_last = h[:, 0]
+
+    y = (gate * h.astype(x.dtype)) @ p["w_out"].astype(x.dtype)
+    return y, (h_last, new_conv)

@@ -1,0 +1,277 @@
+"""Paged KV cache backed by the Ouroboros allocator.
+
+The serving-side embodiment of the paper's technique: KV pages are
+dynamically allocated per sequence from an Ouroboros heap (default
+variant ``vl_chunk`` — the virtualized-list chunk allocator, which
+claims chunks on demand with no init-time carve) and addressed through
+a page table, vLLM-style but with the allocator running *on device* as
+bulk transactions.
+
+Layout: page heaps are stacked over attention layers — one page id
+backs all layers' K/V slots for its 16-token span (page tables are
+layer-invariant, as in vLLM).  Optional int8 quantization stores a per
+(slot, head) scale — this is what makes qwen1.5-32b's decode_32k cell
+fit v5e HBM (DESIGN.md §Arch-applicability).
+
+Single-layer cores (``append1`` / ``prefill_write1`` / ``paged_attend1``)
+are what the model's scan-over-layers consumes; the ``PagedKV``
+container stacks them for the serving engine.  ``paged_attend1`` is the
+GSPMD-shardable jnp decode attention (blockwise online softmax over
+page-table gathers); kernels/paged_attention.py is the single-chip TPU
+Pallas fast path validated against the same oracle.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import HeapConfig, Ouroboros
+
+PAGE_SIZE = 16  # tokens per KV page
+_NEG = -1e30
+
+# Analysis override: the dry-run sets this to the full table width so
+# the page-block loop disappears and HLO cost analysis sees every flop
+# (a while body is only counted once).  Execution memory profiles use
+# the normal blocked path (override None).
+_PB_OVERRIDE = None
+
+# Dense-prefill fast path: when the page table is the canonical layout
+# (page id = b·P + j, the engine's bulk-reservation order) a prefill KV
+# write is a pure reshape — no scatter.  GSPMD cannot partition the
+# general scatter into a fully-sharded heap and replicates it (observed
+# ~46 GiB/chip extra on qwen1.5-32b×prefill_32k).  Enabled by the
+# dry-run/serving launcher; the engine's arbitrary-id path keeps the
+# scatter.
+_DENSE_PREFILL = False
+
+
+def set_page_block_override(v):
+    global _PB_OVERRIDE
+    _PB_OVERRIDE = v
+
+
+def set_dense_prefill(v: bool):
+    global _DENSE_PREFILL
+    _DENSE_PREFILL = bool(v)
+
+
+class KVLayer(NamedTuple):
+    """One attention layer's page heap (the scan-over-layers unit)."""
+    k: jnp.ndarray                  # (NP, page, Hkv, hd) kv_dtype
+    v: jnp.ndarray
+    k_scale: Optional[jnp.ndarray]  # (NP, page, Hkv) f32 — int8 KV only
+    v_scale: Optional[jnp.ndarray]
+
+
+class PagedKV(NamedTuple):
+    layers: KVLayer                 # arrays stacked: (L, NP, page, Hkv, hd)
+    page_table: jnp.ndarray         # (B, P) int32, -1 = hole
+    seq_lens: jnp.ndarray           # (B,) int32 — tokens already cached
+
+    @property
+    def page(self) -> int:
+        return self.layers.k.shape[2]
+
+
+def init_paged_kv(num_layers: int, num_pages: int, batch: int,
+                  max_pages_per_seq: int, num_kv_heads: int, head_dim: int,
+                  kv_dtype=jnp.bfloat16, page: int = PAGE_SIZE) -> PagedKV:
+    shape = (num_layers, num_pages, page, num_kv_heads, head_dim)
+    quant = kv_dtype == jnp.int8
+    return PagedKV(
+        layers=KVLayer(
+            k=jnp.zeros(shape, kv_dtype),
+            v=jnp.zeros(shape, kv_dtype),
+            k_scale=jnp.zeros(shape[:4], jnp.float32) if quant else None,
+            v_scale=jnp.zeros(shape[:4], jnp.float32) if quant else None),
+        page_table=jnp.full((batch, max_pages_per_seq), -1, jnp.int32),
+        seq_lens=jnp.zeros(batch, jnp.int32),
+    )
+
+
+def abstract_paged_kv(num_layers, num_pages, batch, max_pages_per_seq,
+                      num_kv_heads, head_dim, kv_dtype=jnp.bfloat16,
+                      page: int = PAGE_SIZE) -> PagedKV:
+    """ShapeDtypeStruct twin of ``init_paged_kv`` for the dry-run."""
+    shape = (num_layers, num_pages, page, num_kv_heads, head_dim)
+    quant = kv_dtype == jnp.int8
+    sds = jax.ShapeDtypeStruct
+    return PagedKV(
+        layers=KVLayer(
+            k=sds(shape, kv_dtype), v=sds(shape, kv_dtype),
+            k_scale=sds(shape[:4], jnp.float32) if quant else None,
+            v_scale=sds(shape[:4], jnp.float32) if quant else None),
+        page_table=sds((batch, max_pages_per_seq), jnp.int32),
+        seq_lens=sds((batch,), jnp.int32),
+    )
+
+
+def make_kv_allocator(num_pages: int):
+    """Ouroboros instance managing the page-id space.
+
+    Each logical page is one 256 B region of a single-size-class heap;
+    ``vl_chunk`` claims chunks lazily so the full page space is usable.
+    offset//64 (words) ↔ page id.
+
+    Returns (ouro, words_per_page, physical_pages).  Queue segments live
+    in the same heap (the ouroboros property), so granted ids are a
+    subset of [0, physical_pages) that skips segment-occupied chunks —
+    size the KV page array with ``physical_pages``, never ``num_pages``
+    (ids beyond the array would silently drop KV writes)."""
+    chunk = 4096
+    pages_per_chunk = chunk // 256
+    data_chunks = -(-num_pages // pages_per_chunk)
+    # vl segments: one per size class (5) + chunk-queue chain growth
+    # (1023 ids per segment) + headroom.
+    seg_chunks = 5 + data_chunks // 1023 + 3
+    cfg = HeapConfig(total_bytes=(data_chunks + seg_chunks) * chunk,
+                     chunk_bytes=chunk, min_page_bytes=256)
+    physical_pages = cfg.total_words // 64
+    return Ouroboros(cfg, "vl_chunk"), 64, physical_pages
+
+
+def _quant(x):
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0 + 1e-8
+    return jnp.round(x / scale).astype(jnp.int8), scale[..., 0]
+
+
+def _store(layer: KVLayer, idx, k_new, v_new) -> KVLayer:
+    if layer.k_scale is not None:
+        kq, ks = _quant(k_new.astype(jnp.float32))
+        vq, vs = _quant(v_new.astype(jnp.float32))
+        return KVLayer(
+            k=layer.k.at[idx].set(kq, mode="drop"),
+            v=layer.v.at[idx].set(vq, mode="drop"),
+            k_scale=layer.k_scale.at[idx].set(ks, mode="drop"),
+            v_scale=layer.v_scale.at[idx].set(vs, mode="drop"))
+    return layer._replace(
+        k=layer.k.at[idx].set(k_new.astype(layer.k.dtype), mode="drop"),
+        v=layer.v.at[idx].set(v_new.astype(layer.v.dtype), mode="drop"))
+
+
+def append1(layer: KVLayer, page_table, seq_lens, k_t, v_t,
+            ring: bool = False) -> KVLayer:
+    """Write one new token's K/V at position ``seq_lens`` per sequence.
+    k_t, v_t: (B, 1, Hkv, hd).  Pages must already be mapped.
+    ``ring``: windowed attention — table slot = page_index mod P, so a
+    window-sized table serves unbounded sequences (page reuse)."""
+    page = layer.k.shape[1]
+    np_ = layer.k.shape[0]
+    P = page_table.shape[1]
+    pidx, slot = seq_lens // page, seq_lens % page
+    if ring:
+        pidx = pidx % P
+    ids = jnp.take_along_axis(page_table, pidx[:, None], axis=1)[:, 0]
+    idx = (jnp.where(ids >= 0, ids, np_), slot)
+    return _store(layer, idx, k_t[:, 0], v_t[:, 0])
+
+
+def prefill_write1(layer: KVLayer, page_table, k, v, pos0=0,
+                   ring: bool = False) -> KVLayer:
+    """Bulk-write a prefill segment (S tokens).  k, v: (B, S, Hkv, hd)."""
+    B, S = k.shape[:2]
+    page = layer.k.shape[1]
+    np_ = layer.k.shape[0]
+    P = page_table.shape[1]
+    if (_DENSE_PREFILL and not ring and pos0 == 0 and np_ == B * P
+            and S <= P * page):
+        # canonical layout: page id = b·P + j  →  the heap IS the
+        # reshaped K/V tensor (zero-scatter path).
+        pad = P * page - S
+        kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kp = kp.reshape(np_, page, *k.shape[2:])
+        vp = vp.reshape(np_, page, *v.shape[2:])
+        if layer.k_scale is not None:
+            kq, ks = _quant(kp.astype(jnp.float32))
+            vq, vs = _quant(vp.astype(jnp.float32))
+            return KVLayer(k=kq, v=vq, k_scale=ks, v_scale=vs)
+        return KVLayer(k=kp.astype(layer.k.dtype),
+                       v=vp.astype(layer.v.dtype),
+                       k_scale=None, v_scale=None)
+    pos = pos0 + jnp.arange(S, dtype=jnp.int32)[None, :]
+    pos = jnp.broadcast_to(pos, (B, S))
+    pidx, slot = pos // page, pos % page
+    if ring:
+        pidx = pidx % P
+    ids = jnp.take_along_axis(page_table, pidx, axis=1)
+    idx = (jnp.where(ids >= 0, ids, np_), slot)
+    return _store(layer, idx, k, v)
+
+
+def paged_attend1(layer: KVLayer, page_table, kv_len, q, *,
+                  window: Optional[int] = None, page_block: int = 16,
+                  ring: bool = False):
+    """Decode attention for one layer over the paged heap.
+
+    q: (B, 1, Hq, hd); kv_len: (B,) valid tokens (incl. current).
+    Blockwise online softmax over page-table gathers — O(page_block)
+    live memory, GSPMD-shardable (heads on 'model', batch on 'data')."""
+    B, _, Hq, D = q.shape
+    NP, page, Hkv, _ = layer.k.shape
+    P = page_table.shape[1]
+    G = Hq // Hkv
+    pb = min(_PB_OVERRIDE or page_block, P)
+    nblk = -(-P // pb)
+    pad = nblk * pb - P
+    pt = jnp.pad(page_table, ((0, 0), (0, pad)), constant_values=-1)
+    ptb = pt.reshape(B, nblk, pb).transpose(1, 0, 2)   # (nblk, B, pb)
+
+    # staging dtype follows the cache: f32 caches (tests, oracles) stay
+    # exact; bf16/int8 caches stage in bf16 (small dequant blocks) with
+    # f32 accumulation via preferred_element_type below.
+    stage_dt = (jnp.float32 if layer.k.dtype == jnp.float32
+                else jnp.bfloat16)
+    qg = (q[:, 0].reshape(B, Hkv, G, D) * (D ** -0.5)).astype(stage_dt)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        i, ids = inp                                   # ids: (B, pb)
+        safe = jnp.maximum(ids, 0)
+        k = layer.k[safe].astype(stage_dt)             # (B, pb, page, Hkv, D)
+        v = layer.v[safe].astype(stage_dt)
+        if layer.k_scale is not None:
+            k = k * layer.k_scale[safe][..., None].astype(stage_dt)
+            v = v * layer.v_scale[safe][..., None].astype(stage_dt)
+        k = k.reshape(B, pb * page, Hkv, D)
+        v = v.reshape(B, pb * page, Hkv, D)
+        j = i * pb + jax.lax.broadcasted_iota(jnp.int32, (pb, page), 0)
+        slot_of = jax.lax.broadcasted_iota(jnp.int32, (pb, page), 1)
+        if ring:
+            # ring table: slot j holds absolute page cur − ((cur−j) mod P)
+            cur = (jnp.maximum(kv_len, 1) - 1)[:, None, None] // page
+            abs_page = cur - ((cur - j[None]) % P)
+            tok = (abs_page * page + slot_of[None]).reshape(B, -1)
+            valid = (tok >= 0) & (tok < kv_len[:, None]) \
+                & jnp.repeat(ids >= 0, page, axis=1)
+        else:
+            tok = (j * page + slot_of).reshape(-1)[None]  # absolute positions
+            valid = (tok < kv_len[:, None]) \
+                & jnp.repeat(ids >= 0, page, axis=1)
+        if window is not None:
+            valid &= tok > (kv_len[:, None] - 1 - window)
+        s = jnp.einsum("bhgd,bthd->bhgt", qg, k,
+                       preferred_element_type=jnp.float32)
+        s = jnp.where(valid[:, None, None, :], s, _NEG)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.where(valid[:, None, None, :],
+                      jnp.exp(s - m_new[..., None]), 0.0)
+        alpha = jnp.exp(m - m_new)
+        l_new = alpha * l + p.sum(-1)
+        acc_new = alpha[..., None] * acc + jnp.einsum(
+            "bhgt,bthd->bhgd", p.astype(stage_dt), v,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, G), _NEG, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, D), jnp.float32)
+    from repro.models.layers import scan_unroll
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (jnp.arange(nblk, dtype=jnp.int32), ptb),
+        unroll=(min(nblk, 8) if scan_unroll() else 1))
+    out = acc / (l[..., None] + 1e-30)
+    return out.reshape(B, 1, Hq, D)

@@ -1,0 +1,153 @@
+"""Logical-axis sharding rules: FSDP × TP × SP on the (pod, data, model)
+production mesh.
+
+Params carry logical axis names from their Specs (models/params.py);
+the rules here map them to mesh axes:
+
+    vocab / heads / kv_heads / mlp / ssm_inner / expert → 'model'   (TP)
+    embed                                               → FSDP axes (ZeRO-3)
+    batch (activations)                                 → ('pod', 'data')
+    seq   (activations, train/prefill)                  → 'model'   (SP)
+
+A mapping is applied only when the dimension is at least the axis size
+(GSPMD pads non-divisible shards; ≤2× padding is accepted, e.g. 40
+heads over 16 ways → pad to 48).  Tiny dims (kv_heads=2 on a 16-way
+axis) stay replicated rather than paying 8× padding.
+
+``constrain`` is the activation-sharding hook the model code calls; it
+is a no-op outside a ``use_rules`` scope, so single-device tests and
+benches run unchanged.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    mesh: Mesh
+    # logical name -> mesh axis (or tuple of axes)
+    rules: dict
+
+    @classmethod
+    def for_mesh(cls, mesh: Mesh, *, sequence_parallel: bool = True,
+                 fsdp_over_pod: bool = True,
+                 dp_over_model: bool = False) -> "ShardingRules":
+        """``dp_over_model``: small attention-free models (mamba2) have
+        tiny params and sequence-hostile recurrences — the model axis
+        joins data parallelism (batch over every axis, params FSDP over
+        'data' only, no TP/SP)."""
+        has_pod = "pod" in mesh.axis_names
+        fsdp = (("pod", "data") if (has_pod and fsdp_over_pod)
+                else ("data",))
+        batch = ("pod", "data") if has_pod else ("data",)
+        if dp_over_model:
+            batch = batch + ("model",)
+            sequence_parallel = False
+        rules = {
+            "vocab": "model",
+            "embed": fsdp,
+            "heads": "model",
+            "kv_heads": "model",
+            "head_dim": None,
+            "mlp": "model",
+            "ssm_inner": "model",
+            "expert": "model",
+            "layers": None,
+            # activations
+            "batch": batch,
+            "seq": "model" if sequence_parallel else None,
+            "act_embed": None,
+            "pages": batch + ("model",),  # KV page heaps: fully sharded
+            "kv_pages_model": "model",
+        }
+        return cls(mesh=mesh, rules=rules)
+
+    def axis_size(self, mesh_axes) -> int:
+        if mesh_axes is None:
+            return 1
+        if isinstance(mesh_axes, str):
+            mesh_axes = (mesh_axes,)
+        n = 1
+        for a in mesh_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    def spec_for(self, logical: Tuple[Optional[str], ...],
+                 shape: Optional[Tuple[int, ...]] = None) -> P:
+        """Map logical axes to a PartitionSpec, dropping mappings whose
+        dim is smaller than the axis group (padding > 2×)."""
+        out, used = [], set()
+        for i, name in enumerate(logical):
+            mesh_axes = self.rules.get(name) if name else None
+            if mesh_axes is None:
+                out.append(None)
+                continue
+            axes = ((mesh_axes,) if isinstance(mesh_axes, str)
+                    else tuple(mesh_axes))
+            axes = tuple(a for a in axes if a not in used)
+            if not axes:
+                out.append(None)
+                continue
+            # jit in_shardings demand exact divisibility; shrink the
+            # axis tuple from the right until the dim divides (e.g.
+            # batch=256 over (pod,data,model)=512 → (pod,data)=32).
+            while axes and shape is not None \
+                    and shape[i] % self.axis_size(axes) != 0:
+                axes = axes[:-1]
+            if not axes:
+                out.append(None)
+                continue
+            used.update(axes)
+            out.append(axes[0] if len(axes) == 1 else axes)
+        while out and out[-1] is None:
+            out.pop()
+        return P(*out)
+
+    def param_shardings(self, logical_tree, abstract_tree):
+        """NamedShardings for a param pytree (abstract_tree supplies
+        shapes for the divisibility guard)."""
+        def one(axes, sds):
+            return NamedSharding(self.mesh, self.spec_for(axes, sds.shape))
+        return jax.tree.map(one, logical_tree, abstract_tree,
+                            is_leaf=lambda x: isinstance(x, tuple)
+                            and all(isinstance(e, (str, type(None)))
+                                    for e in x))
+
+
+_ACTIVE: list = []
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[ShardingRules]):
+    _ACTIVE.append(rules)
+    try:
+        yield rules
+    finally:
+        _ACTIVE.pop()
+
+
+def current_rules() -> Optional[ShardingRules]:
+    return _ACTIVE[-1] if _ACTIVE else None
+
+
+def constrain(x, *logical):
+    """Annotate activation sharding (no-op without active rules)."""
+    rules = current_rules()
+    if rules is None or x is None:
+        return x
+    spec = rules.spec_for(tuple(logical), x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, spec))
+
+
+def host_local_batch_size(global_batch: int, mesh: Mesh) -> int:
+    n = np.prod([mesh.shape[a] for a in mesh.axis_names
+                 if a in ("pod", "data")])
+    return max(1, global_batch // int(n))

@@ -1,0 +1,271 @@
+"""Continuous-batching serving engine on the Ouroboros paged KV cache.
+
+The end-to-end integration of the paper's allocator with a model
+server: sequences arrive, get admitted into free batch slots, grow
+their KV page-by-page out of the allocator (bulk device transactions —
+one ``alloc`` per engine step covers every growing sequence, the
+lane-aggregated pattern from DESIGN.md §2), and release every page on
+completion.  Page churn across requests of different lengths is exactly
+the fragmentation workload Ouroboros was built for; the default
+``vl_chunk`` variant claims heap chunks lazily and reuses freed pages.
+
+Single-host reference implementation (the dry-run serve_step covers the
+multi-pod path); everything device-side is jitted.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+from repro.paged import kv_cache as KV
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # (Lp,) int32
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, model: Model, params, *, max_batch: int = 8,
+                 max_seq: int = 512, num_pages: Optional[int] = None,
+                 kv_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
+                 sample: str = "greedy"):
+        cfg = model.cfg
+        self.model, self.params, self.cfg = model, params, cfg
+        self.max_batch, self.max_seq = max_batch, max_seq
+        self.page = KV.PAGE_SIZE
+        self.pps = -(-max_seq // self.page)
+        self.num_pages = num_pages or max_batch * self.pps
+        assert sample == "greedy"
+
+        # --- the paper's allocator manages the page-id space -------------
+        self.ouro, self.wpp, physical_pages = KV.make_kv_allocator(
+            self.num_pages)
+        self.alloc_state = self.ouro.init()
+        self.page_bytes = 256  # logical bytes per page in the heap
+
+        # the page array is sized by the heap's PHYSICAL page space:
+        # segment-occupied chunks make granted ids sparse in it.
+        self.caches = model.make_decode_caches(
+            max_batch, max_seq=max_seq, kv_dtype=kv_dtype,
+            num_pages=physical_pages)
+        self.slot_req: List[Optional[Request]] = [None] * max_batch
+        self.slot_pages: List[List[int]] = [[] for _ in range(max_batch)]
+        self.slot_len = np.zeros(max_batch, np.int64)  # host truth
+        self.waiting: List[Request] = []
+        self._uid = 0
+        self._prefill = jax.jit(
+            lambda p, b, c: model.prefill(p, b, c, remat_policy="none",
+                                          dtype=compute_dtype))
+        self._decode = jax.jit(
+            lambda p, t, c: model.decode_step(p, t, c,
+                                              dtype=compute_dtype))
+        self.stats = {"allocs": 0, "frees": 0, "steps": 0,
+                      "alloc_failures": 0}
+
+    # ---- request lifecycle -------------------------------------------------
+    def submit(self, prompt, max_new_tokens=32, eos_id=None) -> int:
+        self._uid += 1
+        self.waiting.append(Request(self._uid, np.asarray(prompt, np.int32),
+                                    max_new_tokens, eos_id))
+        return self._uid
+
+    def _kv(self):
+        c = self.caches
+        return c.self_kv if self.cfg.is_encdec else c.kv
+
+    def _set_kv(self, kv):
+        if self.cfg.is_encdec:
+            self.caches = self.caches._replace(self_kv=kv)
+        else:
+            self.caches = self.caches._replace(kv=kv)
+
+    def _bulk_alloc(self, n_pages: int) -> List[int]:
+        """One allocator transaction for up to n_pages new pages."""
+        lanes = max(self.max_batch * 2, n_pages)
+        sizes = jnp.full(lanes, self.page_bytes, jnp.int32)
+        mask = jnp.arange(lanes) < n_pages
+        self.alloc_state, offs = self.ouro.alloc(self.alloc_state, sizes,
+                                                 mask)
+        offs = np.asarray(offs[:n_pages])
+        ok = offs >= 0
+        self.stats["allocs"] += int(ok.sum())
+        self.stats["alloc_failures"] += int((~ok).sum())
+        return [int(o) // self.wpp if o >= 0 else -1 for o in offs]
+
+    def _bulk_free(self, pages: List[int]):
+        if not pages:
+            return
+        lanes = max(self.max_batch * 2, len(pages))
+        offs = np.full(lanes, -1, np.int32)
+        offs[:len(pages)] = np.asarray(pages, np.int32) * self.wpp
+        sizes = jnp.full(lanes, self.page_bytes, jnp.int32)
+        mask = jnp.asarray(offs >= 0)
+        self.alloc_state = self.ouro.free(
+            self.alloc_state, jnp.asarray(offs), sizes, mask)
+        self.stats["frees"] += len(pages)
+
+    def _map_pages(self, slot: int, upto_tokens: int):
+        """Grow slot's page table to cover ``upto_tokens`` positions."""
+        if self._kv() is None:  # attention-free family: O(1) state
+            return True
+        need = -(-upto_tokens // self.page)
+        missing = need - len(self.slot_pages[slot])
+        if missing <= 0:
+            return True
+        got = self._bulk_alloc(missing)
+        if any(g < 0 for g in got):
+            self._bulk_free([g for g in got if g >= 0])
+            return False
+        kv = self._kv()
+        pt = kv.page_table
+        base = len(self.slot_pages[slot])
+        idx = jnp.arange(base, need)
+        pt = pt.at[slot, idx].set(jnp.asarray(got, jnp.int32))
+        self.slot_pages[slot].extend(got)
+        self._set_kv(kv._replace(page_table=pt))
+        return True
+
+    def _admit(self):
+        for slot in range(self.max_batch):
+            if self.slot_req[slot] is not None or not self.waiting:
+                continue
+            req = self.waiting.pop(0)
+            lp = len(req.prompt)
+            if not self._map_pages(slot, lp + 1):
+                self.waiting.insert(0, req)  # heap full; retry later
+                break
+            # single-row prefill (padded batch keeps jit cache small)
+            toks = np.zeros((self.max_batch, lp), np.int32)
+            toks[slot] = req.prompt
+            batch = {"tokens": jnp.asarray(toks)}
+            if self.cfg.modality == "audio":
+                batch["src_embeds"] = jnp.zeros(
+                    (self.max_batch, lp, self.cfg.d_model), jnp.float32)
+            kv = self._kv()
+            row_mask = np.zeros(self.max_batch, bool)
+            row_mask[slot] = True
+            if kv is not None:
+                # hide other rows' page tables so their KV writes DROP
+                # (heap rows stay disjoint), and zero this row's seq_len.
+                sel = jnp.asarray(row_mask)
+                kv0 = kv._replace(
+                    page_table=jnp.where(sel[:, None], kv.page_table, -1),
+                    seq_lens=jnp.where(sel, 0, kv.seq_lens))
+                caches0 = (self.caches._replace(self_kv=kv0)
+                           if self.cfg.is_encdec
+                           else self.caches._replace(kv=kv0))
+            else:
+                caches0 = self.caches
+            logits, new_caches = self._prefill(self.params, batch, caches0)
+            self.caches = self._merge_row(new_caches, row_mask)
+            first = int(np.argmax(np.asarray(logits[slot])))
+            req.out_tokens.append(first)
+            self.slot_req[slot] = req
+            self.slot_len[slot] = lp + 1
+
+    def _merge_row(self, new_caches, row_mask):
+        """Keep only ``row_mask`` rows from a prefill's cache updates.
+
+        Structure-aware (never shape-guessing — num_layers can equal
+        max_batch): page heaps are taken wholesale (disjoint by
+        construction: other rows' tables were hidden, writes dropped);
+        batch-first leaves merge on axis 0; layer-stacked state leaves
+        (Lr, B, ...) merge on axis 1."""
+        mask = jnp.asarray(row_mask)
+
+        def axis0(new, old):
+            if new is None or old is None:
+                return new
+            sel = mask.reshape((-1,) + (1,) * (new.ndim - 1))
+            return jnp.where(sel, new, old)
+
+        def axis1(new, old):
+            if new is None or old is None:
+                return new
+            sel = mask.reshape((1, -1) + (1,) * (new.ndim - 2))
+            return jnp.where(sel, new, old)
+
+        old = self.caches
+
+        def merge_kv(new_kv, old_kv):
+            if new_kv is None:
+                return None
+            return new_kv._replace(
+                layers=new_kv.layers,  # wholesale: disjoint heap rows
+                page_table=axis0(new_kv.page_table, old_kv.page_table),
+                seq_lens=axis0(new_kv.seq_lens, old_kv.seq_lens))
+
+        if self.cfg.is_encdec:
+            return new_caches._replace(
+                self_kv=merge_kv(new_caches.self_kv, old.self_kv),
+                cross_k=axis1(new_caches.cross_k, old.cross_k),
+                cross_v=axis1(new_caches.cross_v, old.cross_v),
+                enc_valid=(axis0(new_caches.enc_valid, old.enc_valid)
+                           if new_caches.enc_valid is not None
+                           else old.enc_valid))
+        return new_caches._replace(
+            kv=merge_kv(new_caches.kv, old.kv),
+            ssm_h=axis1(new_caches.ssm_h, old.ssm_h),
+            ssm_conv=axis1(new_caches.ssm_conv, old.ssm_conv))
+
+    # ---- main loop -----------------------------------------------------------
+    def step(self) -> List[Request]:
+        """Admit, grow pages, decode one token for all active slots,
+        retire finished requests.  Returns requests finished this step."""
+        self._admit()
+        active = [s for s in range(self.max_batch)
+                  if self.slot_req[s] is not None]
+        finished = []
+        if active:
+            for s in active:
+                if not self._map_pages(s, int(self.slot_len[s]) + 1):
+                    raise MemoryError("KV heap exhausted mid-flight")
+            toks = np.zeros((self.max_batch, 1), np.int32)
+            for s in active:
+                toks[s, 0] = self.slot_req[s].out_tokens[-1]
+            logits, self.caches = self._decode(
+                self.params, jnp.asarray(toks), self.caches)
+            nxt = np.asarray(jnp.argmax(logits, -1))
+            for s in active:
+                req = self.slot_req[s]
+                req.out_tokens.append(int(nxt[s]))
+                self.slot_len[s] += 1
+                ln = len(req.out_tokens)
+                if (ln >= req.max_new_tokens
+                        or (req.eos_id is not None
+                            and int(nxt[s]) == req.eos_id)):
+                    req.done = True
+                    finished.append(req)
+                    self._release(s)
+        self.stats["steps"] += 1
+        return finished
+
+    def _release(self, slot: int):
+        self._bulk_free(self.slot_pages[slot])
+        self.slot_pages[slot] = []
+        kv = self._kv()
+        if kv is not None:
+            pt = kv.page_table.at[slot].set(-1)
+            sl = kv.seq_lens.at[slot].set(0)
+            self._set_kv(kv._replace(page_table=pt, seq_lens=sl))
+        self.slot_req[slot] = None
+        self.slot_len[slot] = 0
+
+    def run_until_done(self, max_steps: int = 10000) -> List[Request]:
+        out = []
+        for _ in range(max_steps):
+            out.extend(self.step())
+            if not self.waiting and all(r is None for r in self.slot_req):
+                break
+        return out

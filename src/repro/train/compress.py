@@ -1,0 +1,73 @@
+"""Gradient compression for the slow cross-pod (DCN) hop.
+
+Within a pod, FSDP gradient reduce-scatters ride the fast ICI links and
+GSPMD fuses them into the backward pass — nothing to compress.  *Across
+pods*, the DCN hop is an order of magnitude slower, so the train step
+optionally performs the cross-pod gradient mean as an explicit int8
+all-to-all with error feedback (1-bit-Adam-style residual carrying):
+
+    q, new_err = quantize(g + err);   g_synced = dequant(psum_int8(q))
+
+4× fewer DCN bytes per step; the quantization residual is replayed into
+the next step so the long-run gradient estimate stays unbiased.
+Validated in tests/test_train.py against the uncompressed mean.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    err: Any  # pytree like grads, f32 residuals
+
+
+def init_ef(params) -> EFState:
+    return EFState(err=jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def _quantize(g):
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_leaf(g, err, axis_name):
+    """Per-leaf compressed psum-mean over ``axis_name`` (inside
+    shard_map).  int8 payload crosses the wire; accumulation is f32 via
+    per-shard scales gathered alongside (tiny)."""
+    g = g.astype(jnp.float32) + err
+    q, scale = _quantize(g)
+    new_err = g - _dequant(q, scale)
+    # all_gather int8 + scales, accumulate in f32 (int8 psum would wrap)
+    qs = jax.lax.all_gather(q, axis_name)           # (pods, ...)
+    scales = jax.lax.all_gather(scale, axis_name)   # (pods,)
+    n = qs.shape[0]
+    summed = jnp.tensordot(scales,
+                           qs.astype(jnp.float32).reshape(n, -1),
+                           axes=1).reshape(g.shape)
+    return (summed / n).astype(g.dtype), new_err
+
+
+def compressed_pmean(grads, ef: EFState, axis_name: str):
+    """Tree-wide compressed mean + error-feedback update."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(ef.err)
+    out, errs = [], []
+    for g, e in zip(flat_g, flat_e):
+        s, ne = compress_leaf(g, e, axis_name)
+        out.append(s.astype(g.dtype))
+        errs.append(ne)
+    return (jax.tree.unflatten(treedef, out),
+            EFState(err=jax.tree.unflatten(treedef, errs)))
+
+
+def plain_pmean(grads, axis_name: str):
+    return jax.tree.map(lambda g: jax.lax.pmean(g, axis_name), grads)

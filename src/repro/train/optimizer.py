@@ -1,0 +1,78 @@
+"""AdamW with global-norm clipping and cosine schedule — pure JAX.
+
+Optimizer state mirrors the param pytree (m, v per leaf) so it inherits
+the params' FSDP×TP shardings leaf-for-leaf under pjit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+    def lr(self, step):
+        step = step.astype(jnp.float32)
+        warm = self.peak_lr * (step + 1) / max(self.warmup_steps, 1)
+        prog = jnp.clip((step - self.warmup_steps)
+                        / max(self.total_steps - self.warmup_steps, 1),
+                        0.0, 1.0)
+        cos = 0.5 * self.peak_lr * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < self.warmup_steps, warm, cos)
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda t: jax.tree.map(jnp.zeros_like, t)
+        return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros(params),
+                          v=zeros(params))
+
+    def update(self, grads, state: AdamWState, params):
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+        step = state.step + 1
+        b1c = 1 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1 - self.b2 ** step.astype(jnp.float32)
+        lr = self.lr(state.step)
+
+        def upd(g, m, v, p):
+            m = self.b1 * m + (1 - self.b1) * g
+            v = self.b2 * v + (1 - self.b2) * g * g
+            mhat = m / b1c
+            vhat = v / b2c
+            new_p = p - lr * (mhat / (jnp.sqrt(vhat) + self.eps)
+                              + self.weight_decay * p)
+            return new_p, m, v
+
+        out = jax.tree.map(upd, grads, state.m, state.v, params)
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, AdamWState(step=step, m=new_m, v=new_v), {
+            "grad_norm": gnorm, "lr": lr}
+
+
+def global_norm(tree):
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))

@@ -1,0 +1,141 @@
+"""Train step: loss → grads → AdamW, with microbatch gradient
+accumulation, remat policy, activation-sharding rules, and the optional
+compressed cross-pod gradient sync (train/compress.py).
+
+The returned ``train_step(state, batch)`` is pjit-ready: callers supply
+in/out shardings from ShardingRules; inside, ``use_rules`` is active
+during tracing so the model's ``constrain`` hooks annotate activations
+(batch→DP, seq→model: Megatron-style sequence parallelism at the
+residual boundaries).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import ShardingRules, use_rules
+from repro.train import compress as C
+from repro.train.optimizer import AdamW, AdamWState
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+    ef: Optional[C.EFState] = None  # error feedback (compressed sync)
+
+
+def init_state(model, key, opt: AdamW, compress: bool = False
+               ) -> TrainState:
+    params = model.init(key)
+    return TrainState(params=params, opt=opt.init(params),
+                      ef=C.init_ef(params) if compress else None)
+
+
+def abstract_state(model, opt: AdamW, compress: bool = False) -> TrainState:
+    params = model.abstract_params()
+    sds = lambda t: jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), t)
+    zeros_like = sds(params)
+    return TrainState(
+        params=params,
+        opt=AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                       m=zeros_like, v=sds(params)),
+        ef=C.EFState(err=jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), params))
+        if compress else None)
+
+
+def state_logical_axes(model, compress: bool = False):
+    ax = model.logical_axes()
+    return TrainState(
+        params=ax,
+        opt=AdamWState(step=(), m=ax, v=ax),
+        ef=C.EFState(err=ax) if compress else None)
+
+
+def _split_micro(batch, k):
+    """Split every batch leaf (batch-first by convention) into k
+    microbatches along axis 0."""
+    return jax.tree.map(
+        lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]), batch)
+
+
+def make_train_step(model, opt: AdamW, *, remat_policy: str = "full",
+                    microbatches: int = 1,
+                    rules: Optional[ShardingRules] = None,
+                    cross_pod_compress: bool = False):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch, remat_policy=remat_policy)
+        return loss, metrics
+
+    def grads_of(params, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            return loss, metrics, grads
+        micro = _split_micro(batch, microbatches)
+
+        def acc(carry, mb):
+            gsum, lsum = carry
+            (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, mb)
+            gsum = jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32), gsum, g)
+            return (gsum, lsum + loss), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                          params)
+        from repro.models.layers import scan_unroll
+        (gsum, lsum), _ = jax.lax.scan(acc, (g0, jnp.float32(0.0)), micro,
+                                       unroll=scan_unroll())
+        k = float(microbatches)
+        grads = jax.tree.map(lambda g: (g / k), gsum)
+        loss = lsum / k
+        return loss, {"ce": loss, "aux": jnp.float32(0),
+                      "tokens": jnp.float32(0)}, grads
+
+    def train_step(state: TrainState, batch):
+        with use_rules(rules):
+            loss, metrics, grads = grads_of(state.params, batch)
+        ef = state.ef
+        if cross_pod_compress and ef is not None:
+            grads, ef = _cross_pod_sync(grads, ef, rules)
+        params, opt_state, om = opt.update(grads, state.opt, state.params)
+        metrics = dict(metrics, loss=loss, **om)
+        return TrainState(params=params, opt=opt_state, ef=ef), metrics
+
+    return train_step
+
+
+def _cross_pod_sync(grads, ef, rules):
+    """Compressed mean over the 'pod' mesh axis via shard_map (manual
+    over 'pod', auto over data/model)."""
+    mesh = rules.mesh
+    if "pod" not in mesh.axis_names or mesh.shape["pod"] == 1:
+        return grads, ef
+    from jax.sharding import PartitionSpec as P
+    from functools import partial
+
+    def sync(g, e):
+        return C.compressed_pmean(g, C.EFState(err=e), "pod")
+
+    specs_g = jax.tree.map(lambda _: P(), grads)
+    fn = jax.shard_map(
+        lambda g, e: sync(g, e),
+        mesh=mesh,
+        in_specs=(specs_g, specs_g),
+        out_specs=(specs_g, C.EFState(err=specs_g)),
+        check_vma=False,
+        axis_names={"pod"},
+    )
+    out, ef2 = fn(grads, ef.err)
+    return out, ef2
+
+
+__all__ = ["TrainState", "init_state", "abstract_state",
+           "state_logical_axes", "make_train_step", "AdamW"]

@@ -1,0 +1,68 @@
+"""Property-based allocator tests (hypothesis): arbitrary interleavings
+of alloc/free batches preserve the heap invariants on every variant.
+
+A python-dict reference allocator tracks live intervals; after every
+transaction we assert: uniqueness, in-bounds, non-overlap, and
+conservation (a granted page is never granted again until freed).
+"""
+import numpy as np
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import HeapConfig, Ouroboros, VARIANTS
+
+CFG = HeapConfig(total_bytes=1 << 16, chunk_bytes=1 << 11,
+                 min_page_bytes=16)
+SIZES = [16, 24, 100, 256, 1000, 2048]
+
+op = st.tuples(
+    st.sampled_from(["alloc", "free"]),
+    st.lists(st.sampled_from(SIZES), min_size=1, max_size=24),
+)
+
+
+@settings(max_examples=15, deadline=None,
+          suppress_health_check=list(HealthCheck))
+@given(variant=st.sampled_from(VARIANTS),
+       ops=st.lists(op, min_size=1, max_size=8),
+       seed=st.integers(0, 2**16))
+def test_interleaved_transactions(variant, ops, seed):
+    rng = np.random.default_rng(seed)
+    ouro = Ouroboros(CFG, variant)
+    state = ouro.init()
+    live = {}  # offset -> size
+
+    for kind, sizes in ops:
+        n = len(sizes)
+        if kind == "alloc":
+            sz = jnp.asarray(sizes, jnp.int32)
+            state, offs = ouro.alloc(state, sz, jnp.ones(n, bool))
+            offs = np.asarray(offs)
+            for o, s in zip(offs, sizes):
+                if o < 0:
+                    continue
+                o = int(o)
+                # in-bounds
+                assert 0 <= o < CFG.total_words
+                # never double-granted
+                assert o not in live
+                live[o] = s
+            # non-overlap over all live intervals
+            ivs = sorted((o, o + max(s // 4, 1)) for o, s in live.items())
+            for (a, b), (c, _) in zip(ivs, ivs[1:]):
+                assert c >= b
+        else:
+            if not live:
+                continue
+            keys = list(live)
+            pick = rng.choice(len(keys), min(len(keys), n), replace=False)
+            drop = [keys[i] for i in pick]
+            m = len(drop)
+            fo = jnp.asarray(drop + [0] * (n - m), jnp.int32)
+            fs = jnp.asarray([live[k] for k in drop] + [0] * (n - m),
+                             jnp.int32)
+            fm = jnp.asarray([True] * m + [False] * (n - m))
+            state = ouro.free(state, fo, fs, fm)
+            for k in drop:
+                del live[k]

@@ -1,0 +1,177 @@
+"""Paged KV cache unit tests: append/prefill writes, paged attention vs
+dense flash, int8 quantization error bounds, windowed masking."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import flash_attention
+from repro.paged import kv_cache as KV
+
+
+def _layer(rng, NP=16, page=8, Hkv=2, D=32, dtype=jnp.float32):
+    quant = dtype == jnp.int8
+    return KV.KVLayer(
+        k=jnp.zeros((NP, page, Hkv, D), dtype),
+        v=jnp.zeros((NP, page, Hkv, D), dtype),
+        k_scale=jnp.zeros((NP, page, Hkv), jnp.float32) if quant else None,
+        v_scale=jnp.zeros((NP, page, Hkv), jnp.float32) if quant else None)
+
+
+def _pt(B, P):
+    return (jnp.arange(B)[:, None] * P + jnp.arange(P)[None, :]).astype(
+        jnp.int32)
+
+
+def test_prefill_then_append_then_attend(rng):
+    B, S, Hq, Hkv, D, page = 2, 24, 4, 2, 32, 8
+    P = 4
+    lay = _layer(rng, NP=B * P, page=page, Hkv=Hkv, D=D)
+    pt = _pt(B, P)
+    k = jnp.asarray(rng.standard_normal((B, S + 1, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S + 1, Hkv, D)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal((B, 1, Hq, D)), jnp.float32)
+
+    lay = KV.prefill_write1(lay, pt, k[:, :S], v[:, :S])
+    lay = KV.append1(lay, pt, jnp.full(B, S, jnp.int32),
+                     k[:, S:], v[:, S:])
+    got = KV.paged_attend1(lay, pt, jnp.full(B, S + 1, jnp.int32), q,
+                           page_block=2)
+    want = flash_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(got, want, atol=2e-2, rtol=2e-2)
+
+
+def test_paged_attend_respects_kv_len(rng):
+    B, Hq, Hkv, D, page, P = 1, 2, 1, 16, 4, 4
+    lay = _layer(rng, NP=P, page=page, Hkv=Hkv, D=D)
+    pt = _pt(B, P)
+    T = P * page
+    k = jnp.asarray(rng.standard_normal((B, T, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, T, Hkv, D)), jnp.float32)
+    lay = KV.prefill_write1(lay, pt, k, v)
+    q = jnp.asarray(rng.standard_normal((B, 1, Hq, D)), jnp.float32)
+    for kv_len in (1, 5, 12):
+        got = KV.paged_attend1(lay, pt, jnp.asarray([kv_len]), q)
+        want = flash_attention(q, k[:, :kv_len], v[:, :kv_len],
+                               causal=False)
+        np.testing.assert_allclose(got, want, atol=2e-2, rtol=2e-2)
+
+
+def test_paged_attend_window(rng):
+    B, Hq, Hkv, D, page, P = 1, 2, 1, 16, 4, 8
+    lay = _layer(rng, NP=P, page=page, Hkv=Hkv, D=D)
+    pt = _pt(B, P)
+    T = P * page
+    k = jnp.asarray(rng.standard_normal((B, T, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, T, Hkv, D)), jnp.float32)
+    lay = KV.prefill_write1(lay, pt, k, v)
+    q = jnp.asarray(rng.standard_normal((B, 1, Hq, D)), jnp.float32)
+    kv_len, win = 30, 8
+    got = KV.paged_attend1(lay, pt, jnp.asarray([kv_len]), q, window=win)
+    want = flash_attention(q, k[:, kv_len - win:kv_len],
+                           v[:, kv_len - win:kv_len], causal=False)
+    np.testing.assert_allclose(got, want, atol=2e-2, rtol=2e-2)
+
+
+def test_int8_kv_quantization_error(rng):
+    B, S, Hq, Hkv, D, page = 2, 32, 4, 2, 64, 8
+    P = S // page
+    k = jnp.asarray(rng.standard_normal((B, S, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, Hkv, D)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal((B, 1, Hq, D)), jnp.float32)
+    pt = _pt(B, P)
+
+    lay8 = _layer(rng, NP=B * P, page=page, Hkv=Hkv, D=D, dtype=jnp.int8)
+    lay8 = KV.prefill_write1(lay8, pt, k, v)
+    got = KV.paged_attend1(lay8, pt, jnp.full(B, S, jnp.int32), q)
+    want = flash_attention(q, k, v, causal=False)
+    # int8 per-(slot, head) scales: ~1% relative error budget
+    rel = np.abs(np.asarray(got) - np.asarray(want)).max() / \
+        np.abs(np.asarray(want)).max()
+    assert rel < 0.05, rel
+
+
+def test_holes_are_dropped(rng):
+    """Unmapped pages (-1) neither write nor contribute to attention."""
+    B, Hkv, D, page, P = 1, 1, 16, 4, 4
+    lay = _layer(rng, NP=P, page=page, Hkv=Hkv, D=D)
+    pt = jnp.asarray([[0, -1, 1, -1]], jnp.int32)
+    S = P * page
+    k = jnp.asarray(rng.standard_normal((B, S, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, Hkv, D)), jnp.float32)
+    before = np.asarray(lay.k).copy()
+    lay = KV.prefill_write1(lay, pt, k, v)
+    after = np.asarray(lay.k)
+    # pages 2, 3 of the heap were never mapped → untouched
+    np.testing.assert_array_equal(after[2:], before[2:])
+
+    q = jnp.asarray(rng.standard_normal((B, 1, 2, D)), jnp.float32)
+    out = KV.paged_attend1(lay, pt, jnp.asarray([S]), q)
+    # equivalent dense attention over the mapped positions only
+    sel = np.r_[0:4, 8:12]
+    want = flash_attention(q, k[:, sel], v[:, sel], causal=False)
+    np.testing.assert_allclose(out, want, atol=2e-2, rtol=2e-2)
+
+
+def test_kv_allocator_page_space(rng):
+    """The Ouroboros-backed page-id allocator grants exactly the page
+    space and recycles freed ids."""
+    ouro, wpp, physical = KV.make_kv_allocator(num_pages=64)
+    st = ouro.init()
+    sizes = jnp.full(64, 256, jnp.int32)
+    st, offs = ouro.alloc(st, sizes, jnp.ones(64, bool))
+    ids = np.asarray(offs) // wpp
+    good = ids[np.asarray(offs) >= 0]
+    assert len(np.unique(good)) == len(good)
+    assert len(good) == 64
+    # every granted id addresses the physical page array
+    assert (good < physical).all()
+    st = ouro.free(st, offs, sizes, jnp.ones(64, bool))
+    st, offs2 = ouro.alloc(st, sizes, jnp.ones(64, bool))
+    assert (np.asarray(offs2) >= 0).sum() >= (np.asarray(offs) >= 0).sum()
+
+
+def test_ring_page_table_window(rng):
+    """Ring tables: a window-bounded table serves an unbounded sequence
+    (slot = page mod P); attention over the ring equals dense attention
+    over the window at every step."""
+    B, Hq, Hkv, D, page = 1, 2, 1, 16, 8
+    window = 16
+    P = window // page + 2          # 4 slots — sequence runs to 6 pages
+    T = 48
+    lay = _layer(rng, NP=P, page=page, Hkv=Hkv, D=D)
+    pt = _pt(B, P)                  # all P physical pages mapped
+    k = jnp.asarray(rng.standard_normal((B, T, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, T, Hkv, D)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal((B, 1, Hq, D)), jnp.float32)
+
+    for t in range(T):
+        lay = KV.append1(lay, pt, jnp.asarray([t]), k[:, t:t + 1],
+                         v[:, t:t + 1], ring=True)
+        kv_len = t + 1
+        got = KV.paged_attend1(lay, pt, jnp.asarray([kv_len]), q,
+                               window=window, ring=True)
+        lo = max(0, kv_len - window)
+        want = flash_attention(q, k[:, lo:kv_len], v[:, lo:kv_len],
+                               causal=False)
+        np.testing.assert_allclose(got, want, atol=2e-2, rtol=2e-2,
+                                   err_msg=f"step {t}")
+
+
+def test_dense_prefill_fast_path_matches_scatter(rng):
+    """Canonical-layout prefill (reshape path) == scatter path."""
+    B, S, Hkv, D, page = 2, 24, 2, 16, 8
+    P = 4
+    k = jnp.asarray(rng.standard_normal((B, S, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, Hkv, D)), jnp.float32)
+    pt = _pt(B, P)  # canonical: id = b·P + j
+    lay = _layer(rng, NP=B * P, page=page, Hkv=Hkv, D=D)
+    a = KV.prefill_write1(lay, pt, k, v)
+    KV.set_dense_prefill(True)
+    try:
+        b = KV.prefill_write1(lay, pt, k, v)
+    finally:
+        KV.set_dense_prefill(False)
+    np.testing.assert_array_equal(np.asarray(a.k), np.asarray(b.k))
+    np.testing.assert_array_equal(np.asarray(a.v), np.asarray(b.v))
