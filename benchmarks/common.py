@@ -27,10 +27,16 @@ BENCH_HEAP = HeapConfig(total_bytes=32 << 20, chunk_bytes=8 << 10,
 
 
 def bench_variant(variant: str, *, n_allocs: int, size_bytes: int,
-                  iters: int = ITERS, cfg: HeapConfig = BENCH_HEAP):
+                  iters: int = ITERS, cfg: HeapConfig = BENCH_HEAP,
+                  backend: str = "jnp"):
     """One paper-style measurement cell.  Returns dict with avg_all /
-    avg_subsequent alloc+free µs and the data-integrity flag."""
-    ouro = Ouroboros(cfg, variant)
+    avg_subsequent alloc+free µs and the data-integrity flag.
+
+    ``backend`` selects the transaction implementation (jnp reference
+    vs fused Pallas kernels) so every figure cell can report the two
+    side by side — on CPU the Pallas path runs in interpret mode, so
+    its timings are only meaningful on a TPU backend."""
+    ouro = Ouroboros(cfg, variant, backend)
     state = ouro.init()
     jax.block_until_ready(state)
     sizes = jnp.full(n_allocs, size_bytes, jnp.int32)
@@ -57,7 +63,8 @@ def bench_variant(variant: str, *, n_allocs: int, size_bytes: int,
 
     us = lambda ts: 1e6 * float(np.mean(ts))
     return {
-        "variant": variant, "n": n_allocs, "size": size_bytes,
+        "variant": variant, "backend": backend,
+        "n": n_allocs, "size": size_bytes,
         "alloc_us_all": us(alloc_t),
         "alloc_us_subsequent": us(alloc_t[1:]),
         "free_us_all": us(free_t),
@@ -72,7 +79,8 @@ THREAD_SWEEP = (32, 128, 512, 1024, 4096, 8192)    # paper fig x-axis 2
 THREAD_SWEEP_CHUNK = (32, 128, 512, 1024, 2048)    # chunk walk is O(N/ppc)
 
 
-def figure_rows(variant: str, quick: bool = False):
+def figure_rows(variant: str, quick: bool = False,
+                backend: str = "jnp"):
     """The two sweeps of one paper figure (size @1024 allocs; threads
     @1000 B), as the paper's figs. 1-6 do per allocator."""
     sizes = SIZE_SWEEP[::3] if quick else SIZE_SWEEP
@@ -82,7 +90,30 @@ def figure_rows(variant: str, quick: bool = False):
     rows = []
     for s in sizes:
         rows.append(bench_variant(variant, n_allocs=1024 if not quick
-                                  else 256, size_bytes=s))
+                                  else 256, size_bytes=s,
+                                  backend=backend))
     for n in threads:
-        rows.append(bench_variant(variant, n_allocs=n, size_bytes=1000))
+        rows.append(bench_variant(variant, n_allocs=n, size_bytes=1000,
+                                  backend=backend))
     return rows
+
+
+def alloc_comparison_cell(variant: str, *, quick: bool = False):
+    """One jnp-vs-pallas cell per variant for BENCH_alloc.json — the
+    perf-trajectory artifact future PRs diff against."""
+    n = 128 if quick else 512
+    cfg = HeapConfig(total_bytes=4 << 20, chunk_bytes=8 << 10,
+                     min_page_bytes=16)
+    out = {}
+    for backend in ("jnp", "pallas"):
+        r = bench_variant(variant, n_allocs=n, size_bytes=256,
+                          iters=4 if quick else ITERS, cfg=cfg,
+                          backend=backend)
+        out[backend] = {
+            "alloc_us_all": r["alloc_us_all"],
+            "alloc_us_subsequent": r["alloc_us_subsequent"],
+            "free_us_all": r["free_us_all"],
+            "free_us_subsequent": r["free_us_subsequent"],
+            "data_ok": r["data_ok"],
+        }
+    return out

@@ -7,5 +7,5 @@ from benchmarks.common import figure_rows
 VARIANT = "va_page"
 
 
-def run(quick: bool = False):
-    return figure_rows(VARIANT, quick=quick)
+def run(quick: bool = False, backend: str = "jnp"):
+    return figure_rows(VARIANT, quick=quick, backend=backend)

@@ -5,13 +5,21 @@ the paper's headline metric (average subsequent allocation time), and
 ``derived`` carries the full methodology split (avg-all vs
 avg-subsequent, free time, per-alloc ns, data-integrity check).
 
+``--backend`` selects the allocator transaction implementation; with
+``both``, every figure cell is reported for the jnp reference path and
+the fused Pallas kernel path side by side.  ``--alloc-json PATH``
+additionally writes a compact jnp-vs-pallas comparison per variant
+(``BENCH_alloc.json``) so future PRs have a perf trajectory to diff
+against.
+
     PYTHONPATH=src python -m benchmarks.run [--quick] [--fig fig1_page]
+        [--backend jnp|pallas|both] [--alloc-json BENCH_alloc.json]
 """
 from __future__ import annotations
 
 import argparse
 import importlib
-import sys
+import json
 
 FIGS = ["fig1_page", "fig2_chunk", "fig3_va_page", "fig4_vl_page",
         "fig5_va_chunk", "fig6_vl_chunk"]
@@ -23,22 +31,45 @@ def main(argv=None) -> None:
                     help="reduced grid (CI)")
     ap.add_argument("--fig", action="append", default=None,
                     help="run only the named figure module(s)")
+    ap.add_argument("--backend", choices=("jnp", "pallas", "both"),
+                    default="jnp",
+                    help="allocator transaction backend per cell")
+    ap.add_argument("--alloc-json", default=None, metavar="PATH",
+                    help="also write per-variant jnp-vs-pallas "
+                         "avg_all/avg_subsequent to PATH")
     args = ap.parse_args(argv)
     figs = args.fig or FIGS
+    backends = (("jnp", "pallas") if args.backend == "both"
+                else (args.backend,))
 
     print("name,us_per_call,derived")
     for fig in figs:
         mod = importlib.import_module(f"benchmarks.{fig}")
-        for row in mod.run(quick=args.quick):
-            name = (f"{fig}/{row['variant']}"
-                    f"/n{row['n']}/s{row['size']}")
-            derived = (f"alloc_all={row['alloc_us_all']:.0f}us "
-                       f"alloc_sub={row['alloc_us_subsequent']:.0f}us "
-                       f"free_sub={row['free_us_subsequent']:.0f}us "
-                       f"per_alloc={row['per_alloc_ns']:.0f}ns "
-                       f"data_ok={row['data_ok']}")
-            print(f"{name},{row['alloc_us_subsequent']:.1f},{derived}",
-                  flush=True)
+        for backend in backends:
+            for row in mod.run(quick=args.quick, backend=backend):
+                name = (f"{fig}/{row['variant']}/{row['backend']}"
+                        f"/n{row['n']}/s{row['size']}")
+                derived = (f"alloc_all={row['alloc_us_all']:.0f}us "
+                           f"alloc_sub={row['alloc_us_subsequent']:.0f}us "
+                           f"free_sub={row['free_us_subsequent']:.0f}us "
+                           f"per_alloc={row['per_alloc_ns']:.0f}ns "
+                           f"data_ok={row['data_ok']}")
+                print(f"{name},{row['alloc_us_subsequent']:.1f},{derived}",
+                      flush=True)
+
+    if args.alloc_json:
+        import jax
+        from benchmarks.common import alloc_comparison_cell
+        from repro.core import VARIANTS
+        report = {v: alloc_comparison_cell(v, quick=args.quick)
+                  for v in VARIANTS}
+        # pallas timings on a non-TPU platform are interpret-mode and
+        # only the jnp column is a perf signal there; record which.
+        report["_meta"] = {"platform": jax.default_backend(),
+                           "quick": bool(args.quick)}
+        with open(args.alloc_json, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+        print(f"wrote {args.alloc_json}", flush=True)
 
 
 if __name__ == "__main__":

@@ -47,3 +47,16 @@ for variant in VARIANTS:
     big_ok = int((np.asarray(offs2) >= 0).sum())
     print(f"{variant:10s} small granted {small_ok:4d}/2048, "
           f"4KiB after churn {big_ok:2d}/32")
+
+print("\n== backend parity: fused Pallas transaction vs jnp oracle ==")
+small = HeapConfig(total_bytes=1 << 16, chunk_bytes=1 << 11,
+                   min_page_bytes=16)
+sizes = jnp.asarray(rng.choice([16, 64, 256, 1024], 16), jnp.int32)
+ones = jnp.ones(16, bool)
+for variant in ("page", "vl_chunk"):
+    st_j, offs_j = (lambda o: o.alloc(o.init(), sizes, ones))(
+        Ouroboros(small, variant, backend="jnp"))
+    st_p, offs_p = (lambda o: o.alloc(o.init(), sizes, ones))(
+        Ouroboros(small, variant, backend="pallas"))
+    same = bool((np.asarray(offs_j) == np.asarray(offs_p)).all())
+    print(f"{variant:10s} jnp == pallas offsets: {same}")

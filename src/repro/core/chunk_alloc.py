@@ -92,7 +92,7 @@ def _set_bits(meta: ChunkMeta, chunk, page_idx, valid, delta_sign):
 
 
 def alloc(cfg: HeapConfig, family_name: str, state: AllocState,
-          sizes_bytes, mask):
+          sizes_bytes, mask, backend: str = "jnp"):
     fam = queues.FAMILIES[family_name]
     C = cfg.num_classes
     n = sizes_bytes.shape[0]
@@ -118,13 +118,15 @@ def alloc(cfg: HeapConfig, family_name: str, state: AllocState,
                 q, ctx, meta = op
                 rank = jnp.zeros(1, jnp.int32)
                 ccls = jnp.full(1, c, jnp.int32)
-                q, ctx, ch = fam.bulk_dequeue(cfg, q, ctx, ccls, rank, one)
+                q, ctx, ch = fam.bulk_dequeue(cfg, q, ctx, ccls, rank, one,
+                                              backend)
                 return q, ctx, meta, ch[0], jnp.array(False)
 
             def from_pool(op):
                 q, ctx, meta = op
                 has = queues.pool_count(ctx.pool) > 0
-                pool, ch = queues.pool_dequeue(cfg, ctx.pool, one & has)
+                pool, ch = queues.pool_dequeue(cfg, ctx.pool, one & has,
+                                               backend)
                 ch = ch[0]
                 sent = meta.bitmap.shape[0]
                 idx = jnp.where(has, ch, sent)
@@ -139,8 +141,22 @@ def alloc(cfg: HeapConfig, family_name: str, state: AllocState,
 
             f = jnp.where(fail_now, 0, meta.free_count[chunk])
             t = jnp.minimum(counts[c] - served, f)
-            page_idx, sel = _select_free_pages(meta.bitmap[chunk], ppc, t)
-            meta = _set_bits(meta, chunk, page_idx, sel, +1)
+            if backend == "pallas":
+                # fused rank-select + bit claim + free-count delta in
+                # one kernel (kernels/alloc_txn.chunk_txn_claim)
+                from repro.kernels import ops as kops
+                page_idx, new_row, nsel = kops.chunk_txn_claim(
+                    meta.bitmap[chunk], t, ppc=ppc)
+                sel = page_idx >= 0
+                gate = jnp.where(nsel[0] > 0, chunk, meta.bitmap.shape[0])
+                meta = meta._replace(
+                    bitmap=meta.bitmap.at[gate].set(new_row, mode="drop"),
+                    free_count=meta.free_count.at[gate].add(
+                        -nsel[0], mode="drop"))
+            else:
+                page_idx, sel = _select_free_pages(meta.bitmap[chunk],
+                                                   ppc, t)
+                meta = _set_bits(meta, chunk, page_idx, sel, +1)
             offs = chunk * cfg.words_per_chunk + page_idx * pw
             dst = req_pos.at[served + jnp.arange(page_idx.shape[0])].get(
                 mode="fill", fill_value=n)
@@ -151,7 +167,7 @@ def alloc(cfg: HeapConfig, family_name: str, state: AllocState,
             ccls = jnp.full(1, c, jnp.int32)
             q, ctx = fam.bulk_enqueue(
                 cfg, q, ctx, ccls, jnp.zeros(1, jnp.int32),
-                jnp.full(1, chunk, jnp.int32), one & leftover)
+                jnp.full(1, chunk, jnp.int32), one & leftover, backend)
             return q, ctx, meta, out, served + t, fail | fail_now
 
         def cond(carry):
@@ -165,7 +181,7 @@ def alloc(cfg: HeapConfig, family_name: str, state: AllocState,
 
 
 def free(cfg: HeapConfig, family_name: str, state: AllocState,
-         offsets_words, sizes_bytes, mask):
+         offsets_words, sizes_bytes, mask, backend: str = "jnp"):
     fam = queues.FAMILIES[family_name]
     C = cfg.num_classes
     n = offsets_words.shape[0]
@@ -189,7 +205,7 @@ def free(cfg: HeapConfig, family_name: str, state: AllocState,
     rev_cls = meta.chunk_class.at[rev_ids].get(mode="fill", fill_value=0)
     rank, _ = groups.masked_rank(rev_cls, rev_ok, C)
     q, ctx = fam.bulk_enqueue(cfg, state.q, state.ctx, rev_cls, rank,
-                              rev_ids, rev_ok)
+                              rev_ids, rev_ok, backend)
     return AllocState(q=q, ctx=ctx, meta=meta)
 
 

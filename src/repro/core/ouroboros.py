@@ -11,12 +11,19 @@ Variant ids match the paper's driver programs (§3):
 
 Public API (all jit-safe, functional):
 
-    ouro = Ouroboros(cfg, "va_page")
+    ouro = Ouroboros(cfg, "va_page", backend="pallas")
     state = ouro.init()
     state, offs = ouro.alloc(state, sizes_bytes, mask)   # offs in words, -1 = fail
     state = ouro.free(state, offs, sizes_bytes, mask)
     heap  = write_pattern(state, offs, sizes_bytes, tag) # benchmark helpers
     ok    = check_pattern(state, offs, sizes_bytes, tag)
+
+``backend`` selects the transaction implementation: ``"jnp"`` (default)
+is the pure-XLA reference path, ``"pallas"`` routes alloc/free through
+the fused device kernels in kernels/alloc_txn.py (interpret mode on
+CPU).  Both backends are bit-identical — the jnp path is the oracle for
+tests/test_alloc_txn_parity.py — and share ``init`` state, so a heap
+can switch backends mid-stream.
 """
 from __future__ import annotations
 
@@ -30,6 +37,7 @@ from repro.core import chunk_alloc, page_alloc
 from repro.core.heap import HeapConfig
 
 VARIANTS = ("page", "chunk", "va_page", "vl_page", "va_chunk", "vl_chunk")
+BACKENDS = ("jnp", "pallas")
 
 
 def _split(variant: str):
@@ -43,12 +51,17 @@ def _split(variant: str):
 
 @dataclasses.dataclass(frozen=True)
 class Ouroboros:
-    """Facade binding a HeapConfig to one of the six variants."""
+    """Facade binding a HeapConfig to one of the six variants and a
+    transaction backend (jnp reference path or fused Pallas kernels)."""
     cfg: HeapConfig
     variant: str
+    backend: str = "jnp"
 
     def __post_init__(self):
         _split(self.variant)
+        if self.backend not in BACKENDS:
+            raise ValueError(
+                f"unknown backend {self.backend!r}; pick from {BACKENDS}")
 
     @property
     def _impl(self):
@@ -65,12 +78,13 @@ class Ouroboros:
     @functools.partial(jax.jit, static_argnums=0, donate_argnums=1)
     def alloc(self, state, sizes_bytes, mask):
         return self._impl.alloc(self.cfg, self._family, state,
-                                sizes_bytes, mask)
+                                sizes_bytes, mask, self.backend)
 
     @functools.partial(jax.jit, static_argnums=0, donate_argnums=1)
     def free(self, state, offsets_words, sizes_bytes, mask):
         return self._impl.free(self.cfg, self._family, state,
-                               offsets_words, sizes_bytes, mask)
+                               offsets_words, sizes_bytes, mask,
+                               self.backend)
 
     def compact(self, state):
         if self._impl is not chunk_alloc:

@@ -19,11 +19,14 @@ import jax.numpy as jnp
 from repro.core import groups, queues
 from repro.core.heap import HeapConfig, size_to_class_device
 
-# When True (TPU deployments), the ring-family bulk dequeue goes through
-# the Pallas kernel (kernels/ring_window.py): per-class wrapped windows
-# are fetched with one VMEM dynamic-slice each instead of a lane gather.
-# Equivalence is asserted in tests/test_kernels.py.
-USE_PALLAS_RING = False
+# ``backend="pallas"`` (validated by core/ouroboros.BACKENDS) routes
+# the whole alloc/free transaction through the fused device kernels
+# (kernels/alloc_txn.py): rank, grant, ring window pop/push, and
+# counter advance in a single pallas_call instead of today's ~dozen-op
+# jnp chain.  Virtualized families keep the heap segment walk in jnp
+# but run their chunk-pool transactions through the same kernels.
+# Bit-exact parity with the jnp reference path is enforced by
+# tests/test_alloc_txn_parity.py.
 
 
 class AllocState(NamedTuple):
@@ -68,7 +71,7 @@ def init(cfg: HeapConfig, family_name: str) -> AllocState:
 
 
 def alloc(cfg: HeapConfig, family_name: str, state: AllocState,
-          sizes_bytes, mask):
+          sizes_bytes, mask, backend: str = "jnp"):
     """Bulk allocation.  Returns (state, word_offsets) — offset −1 marks
     a failed request (over-large size or exhausted inventory), matching
     the GPU original's nullptr."""
@@ -76,33 +79,38 @@ def alloc(cfg: HeapConfig, family_name: str, state: AllocState,
     C = cfg.num_classes
     cls = size_to_class_device(cfg, sizes_bytes)
     valid = mask & (cls < C)
-    rank, counts = groups.masked_rank(cls, valid, C)
+    if backend == "pallas" and family_name == "ring":
+        # one fused kernel: in-kernel masked rank, inventory grant,
+        # wrapped window pop, and front advance (kernels/alloc_txn.py).
+        from repro.kernels import ops as kops
+        offs, new_front = kops.ring_txn_pop(
+            state.q.store, state.q.front, state.q.back, cls, valid,
+            limit=True)
+        q = state.q._replace(front=new_front)
+        return AllocState(q=q, ctx=state.ctx, meta=None), offs
+    rank, _ = groups.masked_rank(cls, valid, C)
     avail = fam.count(state.q)
     # Grants are the per-class rank prefix that fits current inventory;
     # denied lanes are exactly the tail ranks so ranks stay dense.
     grant = valid & (rank < avail[cls % C])
-    if USE_PALLAS_RING and family_name == "ring":
-        from repro.kernels import ops as kops
-        q = state.q
-        granted = jnp.minimum(counts, avail)
-        m = min(int(sizes_bytes.shape[0]), q.store.shape[1])
-        win = kops.ring_window(q.store, q.front % q.store.shape[1],
-                               granted, m=m)
-        offs = jnp.where(grant, win.at[cls % C, rank].get(
-            mode="fill", fill_value=-1), -1)
-        q = q._replace(front=q.front + granted)
-        return AllocState(q=q, ctx=state.ctx, meta=None), offs
-    q, ctx, offs = fam.bulk_dequeue(cfg, state.q, state.ctx, cls, rank, grant)
+    q, ctx, offs = fam.bulk_dequeue(cfg, state.q, state.ctx, cls, rank,
+                                    grant, backend)
     return AllocState(q=q, ctx=ctx, meta=None), offs
 
 
 def free(cfg: HeapConfig, family_name: str, state: AllocState,
-         offsets_words, sizes_bytes, mask):
+         offsets_words, sizes_bytes, mask, backend: str = "jnp"):
     fam = queues.FAMILIES[family_name]
     C = cfg.num_classes
     cls = size_to_class_device(cfg, sizes_bytes)
     valid = mask & (cls < C) & (offsets_words >= 0)
+    if backend == "pallas" and family_name == "ring":
+        from repro.kernels import ops as kops
+        store, new_back = kops.ring_txn_push(
+            state.q.store, state.q.back, cls, offsets_words, valid)
+        q = state.q._replace(store=store, back=new_back)
+        return AllocState(q=q, ctx=state.ctx, meta=None)
     rank, _ = groups.masked_rank(cls, valid, C)
     q, ctx = fam.bulk_enqueue(cfg, state.q, state.ctx, cls, rank,
-                              offsets_words, valid)
+                              offsets_words, valid, backend)
     return AllocState(q=q, ctx=ctx, meta=None)

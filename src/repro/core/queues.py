@@ -23,6 +23,12 @@ DESIGN.md §2 for the mechanism mapping.
 All ``bulk_*`` functions are jit-safe and fixed-shape: the number of
 queue *segments* touched per transaction is bounded statically by
 ``ceil(N / slots_per_seg) + 1`` where N is the request vector width.
+
+Every bulk function takes a trailing ``backend`` argument: ``"jnp"``
+(default) is the reference gather/scatter path, ``"pallas"`` routes
+ring transactions — including the chunk pool the virtualized families
+grow/shrink against — through the fused kernels in
+kernels/alloc_txn.py (bit-identical; see DESIGN.md §4).
 """
 from __future__ import annotations
 
@@ -85,7 +91,17 @@ def ring_count(q: RingState):
 
 
 def ring_bulk_dequeue(cfg: HeapConfig, q: RingState, ctx: AllocCtx,
-                      cls, rank, mask):
+                      cls, rank, mask, backend: str = "jnp"):
+    """``backend="pallas"`` routes through the fused transaction kernel
+    (kernels/alloc_txn.ring_txn_pop), which recomputes the rank
+    in-kernel — every call site's ``rank`` equals
+    ``groups.masked_rank(cls, mask)``, so the paths are bit-identical
+    (asserted by tests/test_alloc_txn_parity.py)."""
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        vals, new_front = kops.ring_txn_pop(q.store, q.front, q.back,
+                                            cls, mask, limit=False)
+        return q._replace(front=new_front), ctx, vals
     cap = q.store.shape[1]
     num_classes = q.store.shape[0]
     counts = groups.segment_counts(cls, mask, num_classes)
@@ -96,7 +112,12 @@ def ring_bulk_dequeue(cfg: HeapConfig, q: RingState, ctx: AllocCtx,
 
 
 def ring_bulk_enqueue(cfg: HeapConfig, q: RingState, ctx: AllocCtx,
-                      cls, rank, vals, mask):
+                      cls, rank, vals, mask, backend: str = "jnp"):
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        store, new_back = kops.ring_txn_push(q.store, q.back, cls, vals,
+                                             mask)
+        return q._replace(store=store, back=new_back), ctx
     cap = q.store.shape[1]
     num_classes = q.store.shape[0]
     counts = groups.segment_counts(cls, mask, num_classes)
@@ -122,19 +143,22 @@ def pool_count(pool: RingState):
     return (pool.back - pool.front)[0]
 
 
-def pool_dequeue(cfg: HeapConfig, pool: RingState, mask):
+def pool_dequeue(cfg: HeapConfig, pool: RingState, mask,
+                 backend: str = "jnp"):
     """Pop one chunk id per active lane (flat mask)."""
     rank = groups.masked_prefix_sum(jnp.ones_like(mask, jnp.int32), mask)
     cls = jnp.zeros(mask.shape[0], jnp.int32)
     pool, _, chunks = ring_bulk_dequeue(
-        cfg, pool, None, cls, rank, mask)
+        cfg, pool, None, cls, rank, mask, backend)
     return pool, chunks
 
 
-def pool_enqueue(cfg: HeapConfig, pool: RingState, chunks, mask):
+def pool_enqueue(cfg: HeapConfig, pool: RingState, chunks, mask,
+                 backend: str = "jnp"):
     rank = groups.masked_prefix_sum(jnp.ones_like(mask, jnp.int32), mask)
     cls = jnp.zeros(mask.shape[0], jnp.int32)
-    pool, _ = ring_bulk_enqueue(cfg, pool, None, cls, rank, chunks, mask)
+    pool, _ = ring_bulk_enqueue(cfg, pool, None, cls, rank, chunks, mask,
+                                backend)
     return pool
 
 
@@ -194,7 +218,7 @@ def virt_count(q: VirtState):
 # --------------------------------------------------------------------------
 
 def va_bulk_enqueue(cfg: HeapConfig, q: VirtState, ctx: AllocCtx,
-                    cls, rank, vals, mask):
+                    cls, rank, vals, mask, backend: str = "jnp"):
     spc = _slots_per_seg(cfg, "va")
     wpc = cfg.words_per_chunk
     C, max_segs = q.directory.shape
@@ -205,7 +229,7 @@ def va_bulk_enqueue(cfg: HeapConfig, q: VirtState, ctx: AllocCtx,
     # 1. grow: append segments so the whole write window is backed.
     n_new = _grow_counts(counts, q.back, spc)
     grid = _grid_mask(n_new, m).reshape(-1)
-    pool, new_chunks = pool_dequeue(cfg, ctx.pool, grid)
+    pool, new_chunks = pool_dequeue(cfg, ctx.pool, grid, backend)
     new_chunks = new_chunks.reshape(C, m)
     seg_back = q.back // spc
     dir_pos = (seg_back[:, None] + 1 + jnp.arange(m, dtype=jnp.int32)[None, :]
@@ -227,7 +251,7 @@ def va_bulk_enqueue(cfg: HeapConfig, q: VirtState, ctx: AllocCtx,
 
 
 def va_bulk_dequeue(cfg: HeapConfig, q: VirtState, ctx: AllocCtx,
-                    cls, rank, mask):
+                    cls, rank, mask, backend: str = "jnp"):
     spc = _slots_per_seg(cfg, "va")
     wpc = cfg.words_per_chunk
     C, max_segs = q.directory.shape
@@ -250,7 +274,8 @@ def va_bulk_dequeue(cfg: HeapConfig, q: VirtState, ctx: AllocCtx,
     dir_pos = (seg_front[:, None] + jnp.arange(m, dtype=jnp.int32)[None, :]
                ) % max_segs
     freed = q.directory[jnp.arange(C)[:, None], dir_pos]
-    pool = pool_enqueue(cfg, ctx.pool, freed.reshape(-1), grid.reshape(-1))
+    pool = pool_enqueue(cfg, ctx.pool, freed.reshape(-1), grid.reshape(-1),
+                        backend)
 
     q = q._replace(front=q.front + counts)
     return q, AllocCtx(heap=ctx.heap, pool=pool), vals
@@ -261,7 +286,7 @@ def va_bulk_dequeue(cfg: HeapConfig, q: VirtState, ctx: AllocCtx,
 # --------------------------------------------------------------------------
 
 def vl_bulk_enqueue(cfg: HeapConfig, q: VirtState, ctx: AllocCtx,
-                    cls, rank, vals, mask):
+                    cls, rank, vals, mask, backend: str = "jnp"):
     spc = _slots_per_seg(cfg, "vl")
     wpc = cfg.words_per_chunk
     C = q.front.shape[0]
@@ -274,7 +299,8 @@ def vl_bulk_enqueue(cfg: HeapConfig, q: VirtState, ctx: AllocCtx,
     # 1. grow: pop new segment chunks and chain them after the tail.
     n_new = _grow_counts(counts, q.back, spc)
     grid = _grid_mask(n_new, m)
-    pool, new_chunks = pool_dequeue(cfg, ctx.pool, grid.reshape(-1))
+    pool, new_chunks = pool_dequeue(cfg, ctx.pool, grid.reshape(-1),
+                                    backend)
     new_chunks = new_chunks.reshape(C, m)
     # terminate every new segment, then link prev -> new (j = 0 links
     # from the current tail).
@@ -303,7 +329,7 @@ def vl_bulk_enqueue(cfg: HeapConfig, q: VirtState, ctx: AllocCtx,
 
 
 def vl_bulk_dequeue(cfg: HeapConfig, q: VirtState, ctx: AllocCtx,
-                    cls, rank, mask):
+                    cls, rank, mask, backend: str = "jnp"):
     spc = _slots_per_seg(cfg, "vl")
     wpc = cfg.words_per_chunk
     C = q.front.shape[0]
@@ -331,7 +357,8 @@ def vl_bulk_dequeue(cfg: HeapConfig, q: VirtState, ctx: AllocCtx,
     n_free = _shrink_counts(counts, q.front, spc)
     grid = _grid_mask(n_free, m)
     freed = chain[:, :m]
-    pool = pool_enqueue(cfg, ctx.pool, freed.reshape(-1), grid.reshape(-1))
+    pool = pool_enqueue(cfg, ctx.pool, freed.reshape(-1), grid.reshape(-1),
+                        backend)
     head = chain[jnp.arange(C), n_free]
 
     q = q._replace(head=head, front=q.front + counts)

@@ -1,0 +1,251 @@
+"""Pallas kernels: fused allocator transactions (the device-side fast path).
+
+The paper's point is that the allocator itself runs *on device*; the
+jnp reference path (core/{queues,page_alloc,chunk_alloc}.py) is correct
+but lowers as a long chain of XLA gathers/scatters.  These kernels fuse
+one whole bulk transaction into a single ``pallas_call`` per family:
+
+``ring_txn_pop``  — the page-family alloc transaction: per-class masked
+    rank (``groups.masked_rank`` moved in-kernel), inventory grant,
+    wrapped ring-window fetch, value gather, and the aggregated
+    front-counter advance.  One grid step per size class; the class's
+    ring row stages through VMEM, ``front``/``back`` ride in as scalar
+    prefetch (known before the DMA, exactly like kernels/ring_window).
+
+``ring_txn_push`` — the inverse free transaction: in-kernel rank, a
+    rank→slot scatter built as a one-hot reduction (no XLA scatter),
+    wrapped window write-back via doubled-row dynamic slices, and the
+    back-counter advance.
+
+``chunk_txn_claim`` — the chunk-family claim step: bitmap expansion,
+    free-page rank-select (kernels/bitmap_select logic moved on-device),
+    bit claim, and the free-count delta, fused into one kernel over a
+    chunk's occupancy-bitmap row.
+
+Mechanism mapping (DESIGN.md §4): GPU Ouroboros mutates ``front``/
+``back`` with per-thread atomics inside a warp-aggregated critical
+section; here the whole request vector is one grid program, the rank
+computation plays the role of the warp ballot, and the single counter
+write at the end is the aggregated atomic-add.  Equivalence with the
+jnp path is bit-exact (int32 arithmetic only) and enforced by
+tests/test_alloc_txn_parity.py.
+
+On CPU (tests, CI) the kernels run in ``interpret=True`` mode; the
+wrappers in kernels/ops.py pick the mode from the backend.  VMEM note:
+the ring row (``cap`` words), the lane vector (``n``), and the (n, m)
+one-hot tile must fit on-chip — callers keep ``n`` at bulk-transaction
+width (≤ 8K lanes), as everywhere else in this repo.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _iota(n):
+    """1-D iota via 2-D broadcasted_iota (TPU forbids 1-D iota)."""
+    return jax.lax.broadcasted_iota(jnp.int32, (n, 1), 0).reshape(n)
+
+
+def _member_rank(cls, valid, c):
+    """In-kernel ``groups.masked_rank`` restricted to class ``c``."""
+    member = (cls == c) & (valid != 0)
+    memi = member.astype(jnp.int32)
+    inc = jnp.cumsum(memi)
+    return member, inc - memi, jnp.sum(memi)
+
+
+# --------------------------------------------------------------------------
+# ring_txn_pop — fused page-family alloc
+# --------------------------------------------------------------------------
+
+def _pop_kernel(front_ref, back_ref, store_ref, cls_ref, valid_ref,
+                vals_ref, nfront_ref, *, m: int, limit: bool):
+    c = pl.program_id(0)
+    row = store_ref[0, :]
+    n = cls_ref.shape[0]
+
+    member, rank, _ = _member_rank(cls_ref[...], valid_ref[...], c)
+    if limit:
+        # inventory grant: the dense rank prefix that fits back - front
+        grant = member & (rank < back_ref[c] - front_ref[c])
+    else:
+        grant = member
+    cnt = jnp.sum(grant.astype(jnp.int32))
+
+    # wrapped window [front, front + m) as one dynamic slice of the
+    # doubled row, then a one-hot gather (granted ranks are dense, and
+    # rank % m == wrapped ring position relative to the window start).
+    start = front_ref[c] % row.shape[0]
+    padded = jnp.concatenate([row, row[:m]])
+    win = jax.lax.dynamic_slice(padded, (start,), (m,))
+    j = jax.lax.broadcasted_iota(jnp.int32, (n, m), 1)
+    sel = grant[:, None] & (j == (rank % m)[:, None])
+    gathered = jnp.sum(jnp.where(sel, win[None, :], 0), axis=1)
+
+    @pl.when(c == 0)
+    def _init():
+        vals_ref[...] = jnp.full((n,), -1, jnp.int32)
+
+    vals_ref[...] = jnp.where(grant, gathered, vals_ref[...])
+    nfront_ref[0] = front_ref[c] + cnt
+
+
+@functools.partial(jax.jit, static_argnames=("limit", "interpret"))
+def ring_txn_pop(store, front, back, cls, valid, *, limit: bool,
+                 interpret: bool = False):
+    """Fused bulk dequeue.  Returns ``(vals, new_front)``.
+
+    ``limit=True`` is the page-alloc transaction (lanes whose in-class
+    rank exceeds inventory fail with −1 and do not advance the
+    counter); ``limit=False`` replicates ``queues.ring_bulk_dequeue``
+    exactly (unconditional pop — pool semantics).  Lanes' implicit rank
+    is their in-kernel masked rank, which matches every call site's
+    ``groups.masked_rank``.
+    """
+    C, cap = store.shape
+    n = cls.shape[0]
+    m = min(n, cap)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(C,),
+        in_specs=[pl.BlockSpec((1, cap), lambda c, f, b: (c, 0)),
+                  pl.BlockSpec((n,), lambda c, f, b: (0,)),
+                  pl.BlockSpec((n,), lambda c, f, b: (0,))],
+        out_specs=[pl.BlockSpec((n,), lambda c, f, b: (0,)),
+                   pl.BlockSpec((1,), lambda c, f, b: (c,))],
+    )
+    vals, new_front = pl.pallas_call(
+        functools.partial(_pop_kernel, m=m, limit=limit),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.int32),
+                   jax.ShapeDtypeStruct((C,), jnp.int32)],
+        interpret=interpret,
+    )(front.astype(jnp.int32), back.astype(jnp.int32), store,
+      cls.astype(jnp.int32), valid.astype(jnp.int32))
+    return vals, new_front
+
+
+# --------------------------------------------------------------------------
+# ring_txn_push — fused page-family free
+# --------------------------------------------------------------------------
+
+def _push_kernel(back_ref, store_ref, cls_ref, vals_ref, valid_ref,
+                 out_ref, nback_ref, *, m: int):
+    c = pl.program_id(0)
+    row = store_ref[0, :]
+    cap = row.shape[0]
+    n = cls_ref.shape[0]
+
+    member, rank, cnt = _member_rank(cls_ref[...], valid_ref[...], c)
+
+    # rank → window-slot scatter as a one-hot reduction over lanes
+    # (slots are unique while the ring has room, which init guarantees).
+    j2 = jax.lax.broadcasted_iota(jnp.int32, (n, m), 1)
+    sel = member[:, None] & (j2 == (rank % m)[:, None])
+    w = jnp.sum(jnp.where(sel, vals_ref[...][:, None], 0), axis=0)
+
+    # write w[0:cnt] at ring positions (back + j) % cap: dynamic-update
+    # the doubled row, then fold the overflow back onto the head.
+    start = back_ref[c] % cap
+    padded = jnp.concatenate([row, row[:m]])
+    cur = jax.lax.dynamic_slice(padded, (start,), (m,))
+    jm = _iota(m)
+    padded = jax.lax.dynamic_update_slice(
+        padded, jnp.where(jm < cnt, w, cur), (start,))
+    over = start + cnt - cap
+    head = jnp.where(jm < over, padded[cap:cap + m], padded[:m])
+    out_ref[0, :] = jnp.concatenate([head, padded[m:cap]])
+    nback_ref[0] = back_ref[c] + cnt
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ring_txn_push(store, back, cls, vals, valid, *,
+                  interpret: bool = False):
+    """Fused bulk enqueue.  Returns ``(new_store, new_back)`` —
+    bit-identical to ``queues.ring_bulk_enqueue``."""
+    C, cap = store.shape
+    n = cls.shape[0]
+    m = min(n, cap)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(C,),
+        in_specs=[pl.BlockSpec((1, cap), lambda c, b: (c, 0)),
+                  pl.BlockSpec((n,), lambda c, b: (0,)),
+                  pl.BlockSpec((n,), lambda c, b: (0,)),
+                  pl.BlockSpec((n,), lambda c, b: (0,))],
+        out_specs=[pl.BlockSpec((1, cap), lambda c, b: (c, 0)),
+                   pl.BlockSpec((1,), lambda c, b: (c,))],
+    )
+    new_store, new_back = pl.pallas_call(
+        functools.partial(_push_kernel, m=m),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((C, cap), store.dtype),
+                   jax.ShapeDtypeStruct((C,), jnp.int32)],
+        interpret=interpret,
+    )(back.astype(jnp.int32), store, cls.astype(jnp.int32),
+      vals.astype(jnp.int32), valid.astype(jnp.int32))
+    return new_store, new_back
+
+
+# --------------------------------------------------------------------------
+# chunk_txn_claim — fused chunk-family bitmap claim
+# --------------------------------------------------------------------------
+
+def _claim_kernel(take_ref, row_ref, pidx_ref, nrow_ref, nsel_ref,
+                  *, ppc: int):
+    row = row_ref[...].astype(jnp.uint32)
+    bw = row.shape[0]
+    nbits = bw * 32
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (bw, 32), 1)
+    occ = ((row[:, None] >> shifts) & 1).astype(jnp.int32).reshape(nbits)
+    p = _iota(nbits)
+    free = (occ == 0) & (p < ppc)
+    fi = free.astype(jnp.int32)
+    order = jnp.cumsum(fi) - fi
+    chosen = free & (order < take_ref[0])
+    total = jnp.sum(chosen.astype(jnp.int32))
+
+    # compact chosen bit positions to the front (ascending, −1 padded),
+    # matching jnp.nonzero(chosen, size=nbits, fill_value=-1)
+    onehot = chosen[None, :] & (order[None, :] == p[:, None])
+    pidx = jnp.sum(jnp.where(onehot, p[None, :], 0), axis=1)
+    pidx_ref[...] = jnp.where(p < total, pidx, -1)
+
+    add = jnp.sum(jnp.where(chosen.reshape(bw, 32),
+                            jnp.uint32(1) << shifts, jnp.uint32(0)), axis=1)
+    nrow_ref[...] = row + add  # claimed bits were 0, so + == OR
+    nsel_ref[0] = total
+
+
+@functools.partial(jax.jit, static_argnames=("ppc", "interpret"))
+def chunk_txn_claim(row, take, *, ppc: int, interpret: bool = False):
+    """Fused rank-select + claim over one chunk's occupancy bitmap.
+
+    Returns ``(page_idx, new_row, n_selected)``: the first ``take``
+    free page indices (−1 padded, ascending — bit-identical to
+    ``chunk_alloc._select_free_pages``), the bitmap row with those bits
+    set, and the claimed count (== the free-count delta).
+    """
+    (bw,) = row.shape
+    nbits = bw * 32
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((bw,), lambda i, t: (0,))],
+        out_specs=[pl.BlockSpec((nbits,), lambda i, t: (0,)),
+                   pl.BlockSpec((bw,), lambda i, t: (0,)),
+                   pl.BlockSpec((1,), lambda i, t: (0,))],
+    )
+    return pl.pallas_call(
+        functools.partial(_claim_kernel, ppc=ppc),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((nbits,), jnp.int32),
+                   jax.ShapeDtypeStruct((bw,), jnp.uint32),
+                   jax.ShapeDtypeStruct((1,), jnp.int32)],
+        interpret=interpret,
+    )(jnp.reshape(take, (1,)).astype(jnp.int32), row)

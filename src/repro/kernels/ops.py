@@ -10,6 +10,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import alloc_txn as _alloc_txn
 from repro.kernels.bitmap_select import bitmap_select as _bitmap_select
 from repro.kernels.paged_attention import paged_attention as _paged_attention
 from repro.kernels.ring_window import ring_window as _ring_window
@@ -22,6 +23,23 @@ def _interpret() -> bool:
 
 def ring_window(store, front, counts, *, m: int):
     return _ring_window(store, front, counts, m=m, interpret=_interpret())
+
+
+# ---- fused allocator transactions (kernels/alloc_txn.py) -------------------
+
+def ring_txn_pop(store, front, back, cls, valid, *, limit: bool):
+    return _alloc_txn.ring_txn_pop(store, front, back, cls, valid,
+                                   limit=limit, interpret=_interpret())
+
+
+def ring_txn_push(store, back, cls, vals, valid):
+    return _alloc_txn.ring_txn_push(store, back, cls, vals, valid,
+                                    interpret=_interpret())
+
+
+def chunk_txn_claim(row, take, *, ppc: int):
+    return _alloc_txn.chunk_txn_claim(row, take, ppc=ppc,
+                                      interpret=_interpret())
 
 
 def bitmap_select(words, k, *, block_words: int = 32):

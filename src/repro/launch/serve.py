@@ -20,6 +20,10 @@ def main(argv=None):
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=256)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--alloc-backend", choices=("jnp", "pallas"),
+                    default="jnp",
+                    help="allocator transaction backend (fused Pallas "
+                         "kernels or jnp reference path)")
     args = ap.parse_args(argv)
 
     import jax
@@ -34,7 +38,8 @@ def main(argv=None):
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
     eng = ServingEngine(model, params, max_batch=args.max_batch,
-                        max_seq=args.max_seq)
+                        max_seq=args.max_seq,
+                        alloc_backend=args.alloc_backend)
 
     rng = np.random.default_rng(args.seed)
     for _ in range(args.requests):

@@ -109,12 +109,14 @@ def abstract_paged_kv(num_layers, num_pages, batch, max_pages_per_seq,
     )
 
 
-def make_kv_allocator(num_pages: int):
+def make_kv_allocator(num_pages: int, backend: str = "jnp"):
     """Ouroboros instance managing the page-id space.
 
     Each logical page is one 256 B region of a single-size-class heap;
     ``vl_chunk`` claims chunks lazily so the full page space is usable.
-    offset//64 (words) ↔ page id.
+    offset//64 (words) ↔ page id.  ``backend`` selects the transaction
+    implementation (jnp reference or fused Pallas kernels) — both are
+    bit-identical, so serving behaviour is backend-invariant.
 
     Returns (ouro, words_per_page, physical_pages).  Queue segments live
     in the same heap (the ouroboros property), so granted ids are a
@@ -130,7 +132,7 @@ def make_kv_allocator(num_pages: int):
     cfg = HeapConfig(total_bytes=(data_chunks + seg_chunks) * chunk,
                      chunk_bytes=chunk, min_page_bytes=256)
     physical_pages = cfg.total_words // 64
-    return Ouroboros(cfg, "vl_chunk"), 64, physical_pages
+    return Ouroboros(cfg, "vl_chunk", backend), 64, physical_pages
 
 
 def _quant(x):

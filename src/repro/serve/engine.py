@@ -39,7 +39,7 @@ class ServingEngine:
     def __init__(self, model: Model, params, *, max_batch: int = 8,
                  max_seq: int = 512, num_pages: Optional[int] = None,
                  kv_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
-                 sample: str = "greedy"):
+                 sample: str = "greedy", alloc_backend: str = "jnp"):
         cfg = model.cfg
         self.model, self.params, self.cfg = model, params, cfg
         self.max_batch, self.max_seq = max_batch, max_seq
@@ -49,8 +49,10 @@ class ServingEngine:
         assert sample == "greedy"
 
         # --- the paper's allocator manages the page-id space -------------
+        # (alloc_backend="pallas" runs page grants/releases through the
+        # fused device-transaction kernels; bit-identical to "jnp")
         self.ouro, self.wpp, physical_pages = KV.make_kv_allocator(
-            self.num_pages)
+            self.num_pages, backend=alloc_backend)
         self.alloc_state = self.ouro.init()
         self.page_bytes = 256  # logical bytes per page in the heap
 

@@ -14,5 +14,20 @@ def rng():
     return np.random.default_rng(0)
 
 
+def pytest_addoption(parser):
+    parser.addoption(
+        "--runslow", action="store_true", default=False,
+        help="run tests marked slow (long system/train integration)")
+
+
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running integration test")
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--runslow"):
+        return
+    skip = pytest.mark.skip(reason="slow test: pass --runslow to run")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip)

@@ -125,6 +125,70 @@ def test_data_integrity_under_churn(ouro):
             assert ok.all(), f"data corrupted at iter {it}"
 
 
+# ---- write_pattern / check_pattern: the paper-§3 integrity check ----------
+# (deliberately corrupted offset sets MUST flip the flag — this is what
+# the benchmark's data_ok column and the parity harness rely on)
+
+def test_check_pattern_detects_aliased_offsets():
+    """Two lanes pointed at the same region: the later write clobbers
+    the earlier tag, so the earlier lane's integrity flag must drop."""
+    ouro = Ouroboros(CFG, "page")
+    st = ouro.init()
+    offs = jnp.asarray([128, 128], jnp.int32)       # deliberate alias
+    sizes = jnp.full(2, 64, jnp.int32)
+    tags = jnp.asarray([7, 9], jnp.int32)
+    st = ouro.write_pattern(st, offs, sizes, tags)
+    ok = np.asarray(ouro.check_pattern(st, offs, sizes, tags))
+    assert not ok[0], "aliased write must corrupt lane 0's tag"
+    assert ok[1], "last writer's own tag is intact"
+
+
+def test_check_pattern_detects_partial_overlap():
+    """Offsets overlapping by a strict sub-range (64 B regions, 32 B
+    apart) corrupt exactly the overlapped lane."""
+    ouro = Ouroboros(CFG, "page")
+    st = ouro.init()
+    offs = jnp.asarray([0, 8, 64], jnp.int32)       # words; 8 < 64/4
+    sizes = jnp.full(3, 64, jnp.int32)
+    tags = jnp.asarray([1, 2, 3], jnp.int32)
+    st = ouro.write_pattern(st, offs, sizes, tags)
+    ok = np.asarray(ouro.check_pattern(st, offs, sizes, tags))
+    assert list(ok) == [False, True, True]
+
+
+def test_check_pattern_failed_lanes_report_false():
+    """Failed allocations (offset −1) are never 'intact': the flag is
+    False and the write is dropped (no heap corruption)."""
+    ouro = Ouroboros(CFG, "page")
+    st = ouro.init()
+    heap_before = np.asarray(st.ctx.heap)
+    offs = jnp.asarray([-1, 256], jnp.int32)
+    sizes = jnp.full(2, 64, jnp.int32)
+    tags = jnp.asarray([5, 6], jnp.int32)
+    st = ouro.write_pattern(st, offs, sizes, tags)
+    ok = np.asarray(ouro.check_pattern(st, offs, sizes, tags))
+    assert list(ok) == [False, True]
+    # the failed lane wrote nothing anywhere
+    heap_after = np.asarray(st.ctx.heap)
+    touched = np.nonzero(heap_after != heap_before)[0]
+    assert touched.min() >= 256 and touched.max() < 256 + 16
+
+
+def test_check_pattern_clean_on_disjoint_granted(ouro):
+    """Control: genuinely disjoint allocator grants all verify True —
+    across every variant (the paper's §3 criterion end-to-end).  Lane
+    width 64 matches the churn test so transactions reuse its jit
+    cache."""
+    st = ouro.init()
+    sizes = jnp.asarray([16, 64, 256, 1024] * 16, jnp.int32)
+    st, offs = ouro.alloc(st, sizes, jnp.ones(64, bool))
+    tags = jnp.arange(100, 164, dtype=jnp.int32)
+    st = ouro.write_pattern(st, offs, sizes, tags)
+    ok = np.asarray(ouro.check_pattern(st, offs, sizes, tags))
+    granted = np.asarray(offs) >= 0
+    assert ok[granted].all() and granted.any()
+
+
 def test_masked_lanes_ignored(ouro):
     st = ouro.init()
     sizes = jnp.full(16, 64, jnp.int32)

@@ -1,33 +1,36 @@
-"""Property-based allocator tests (hypothesis): arbitrary interleavings
-of alloc/free batches preserve the heap invariants on every variant.
+"""Property-based allocator tests: arbitrary interleavings of
+alloc/free batches preserve the heap invariants on every variant.
 
 A python-dict reference allocator tracks live intervals; after every
 transaction we assert: uniqueness, in-bounds, non-overlap, and
 conservation (a granted page is never granted again until freed).
+
+``hypothesis`` is an optional dependency: when present, the properties
+run under its shrinking strategies; without it, a pure-pytest fallback
+replays the same checker over seeded ``np.random`` traces so the
+invariants stay guarded either way (and collection never errors).
 """
 import numpy as np
-from hypothesis import HealthCheck, given, settings, strategies as st
+import pytest
 
 import jax.numpy as jnp
 
 from repro.core import HeapConfig, Ouroboros, VARIANTS
 
+try:  # optional dependency — see fallback below
+    from hypothesis import HealthCheck, given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
 CFG = HeapConfig(total_bytes=1 << 16, chunk_bytes=1 << 11,
                  min_page_bytes=16)
 SIZES = [16, 24, 100, 256, 1000, 2048]
 
-op = st.tuples(
-    st.sampled_from(["alloc", "free"]),
-    st.lists(st.sampled_from(SIZES), min_size=1, max_size=24),
-)
 
-
-@settings(max_examples=15, deadline=None,
-          suppress_health_check=list(HealthCheck))
-@given(variant=st.sampled_from(VARIANTS),
-       ops=st.lists(op, min_size=1, max_size=8),
-       seed=st.integers(0, 2**16))
-def test_interleaved_transactions(variant, ops, seed):
+def check_interleaved_trace(variant, ops, seed):
+    """The property: replay ``ops`` (list of ("alloc"|"free", sizes))
+    and assert the heap invariants after every transaction."""
     rng = np.random.default_rng(seed)
     ouro = Ouroboros(CFG, variant)
     state = ouro.init()
@@ -66,3 +69,39 @@ def test_interleaved_transactions(variant, ops, seed):
             state = ouro.free(state, fo, fs, fm)
             for k in drop:
                 del live[k]
+
+
+if HAVE_HYPOTHESIS:
+    op = st.tuples(
+        st.sampled_from(["alloc", "free"]),
+        st.lists(st.sampled_from(SIZES), min_size=1, max_size=24),
+    )
+
+    @settings(max_examples=15, deadline=None,
+              suppress_health_check=list(HealthCheck))
+    @given(variant=st.sampled_from(VARIANTS),
+           ops=st.lists(op, min_size=1, max_size=8),
+           seed=st.integers(0, 2**16))
+    def test_interleaved_transactions(variant, ops, seed):
+        check_interleaved_trace(variant, ops, seed)
+
+
+def _random_ops(rng):
+    """Seeded stand-in for the hypothesis strategy above.  Lane width
+    is fixed at 16 — the same width (and heap config) as
+    test_alloc_txn_parity, so each variant's transactions compile once
+    per session across both suites."""
+    ops = []
+    for _ in range(int(rng.integers(2, 9))):
+        kind = "alloc" if rng.random() < 0.6 else "free"
+        ops.append((kind, [int(s) for s in rng.choice(SIZES, 16)]))
+    return ops
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+@pytest.mark.parametrize("seed", [0, 1])
+def test_interleaved_transactions_fallback(variant, seed):
+    """Pure-pytest randomized form of the property: runs with or
+    without hypothesis installed."""
+    rng = np.random.default_rng(seed)
+    check_interleaved_trace(variant, _random_ops(rng), seed)

@@ -1,24 +1,29 @@
-"""Masked group operations — the paper-§2 transplant layer."""
+"""Masked group operations — the paper-§2 transplant layer.
+
+``hypothesis`` is optional: its property tests run when installed; a
+seeded pure-pytest fallback exercises the same checkers otherwise.
+"""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
 
 import jax.numpy as jnp
 
 from repro.core import groups
 
+try:  # optional dependency — seeded fallback below covers absence
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
-@settings(max_examples=50, deadline=None)
-@given(st.lists(st.booleans(), min_size=1, max_size=100))
-def test_ballot_packs_bits(bits):
+
+def check_ballot_packs_bits(bits):
     out = np.asarray(groups.masked_ballot(jnp.asarray(bits)))
     for i, b in enumerate(bits):
         assert bool((out[i // 32] >> (i % 32)) & 1) == b
 
 
-@settings(max_examples=50, deadline=None)
-@given(st.lists(st.tuples(st.integers(0, 4), st.booleans()),
-                min_size=1, max_size=64))
-def test_masked_rank_is_dense_per_class(items):
+def check_masked_rank_is_dense_per_class(items):
     cls = jnp.asarray([c for c, _ in items], jnp.int32)
     mask = jnp.asarray([m for _, m in items])
     rank, counts = groups.masked_rank(cls, mask, 5)
@@ -30,6 +35,35 @@ def test_masked_rank_is_dense_per_class(items):
             seen[c] += 1
     for c in range(5):
         assert counts[c] == seen[c]
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.booleans(), min_size=1, max_size=100))
+    def test_ballot_packs_bits(bits):
+        check_ballot_packs_bits(bits)
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.tuples(st.integers(0, 4), st.booleans()),
+                    min_size=1, max_size=64))
+    def test_masked_rank_is_dense_per_class(items):
+        check_masked_rank_is_dense_per_class(items)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_ballot_packs_bits_fallback(seed):
+    rng = np.random.default_rng(seed)
+    bits = [bool(b) for b in rng.random(int(rng.integers(1, 101))) < 0.5]
+    check_ballot_packs_bits(bits)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_masked_rank_is_dense_per_class_fallback(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 65))
+    items = [(int(rng.integers(0, 5)), bool(rng.random() < 0.5))
+             for _ in range(n)]
+    check_masked_rank_is_dense_per_class(items)
 
 
 def test_masked_prefix_sum():

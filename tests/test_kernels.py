@@ -141,7 +141,8 @@ def test_ring_window_matches_page_alloc(rng):
 
 
 def test_pallas_ring_path_equals_jnp_path(rng):
-    """core/page_alloc with USE_PALLAS_RING: identical grants & state."""
+    """core/page_alloc with backend="pallas": identical grants & state
+    (the fused-transaction form of the old USE_PALLAS_RING toggle)."""
     from repro.core import HeapConfig, page_alloc
     import jax.numpy as jnp
     cfg = HeapConfig(total_bytes=1 << 17, chunk_bytes=1 << 11,
@@ -150,15 +151,78 @@ def test_pallas_ring_path_equals_jnp_path(rng):
     mask = jnp.asarray(rng.random(48) < 0.9)
 
     st = page_alloc.init(cfg, "ring")
-    s_ref, o_ref = page_alloc.alloc(cfg, "ring", st, sizes, mask)
-    page_alloc.USE_PALLAS_RING = True
-    try:
-        s_ker, o_ker = page_alloc.alloc(cfg, "ring", st, sizes, mask)
-    finally:
-        page_alloc.USE_PALLAS_RING = False
+    s_ref, o_ref = page_alloc.alloc(cfg, "ring", st, sizes, mask, "jnp")
+    s_ker, o_ker = page_alloc.alloc(cfg, "ring", st, sizes, mask,
+                                    "pallas")
     np.testing.assert_array_equal(np.asarray(o_ref), np.asarray(o_ker))
     np.testing.assert_array_equal(np.asarray(s_ref.q.front),
                                   np.asarray(s_ker.q.front))
+
+
+# ---- alloc_txn fused transactions ------------------------------------------
+
+def test_ring_txn_pop_matches_bulk_dequeue(rng):
+    """Fused pop (limit=False) == queues.ring_bulk_dequeue, including
+    wraparound, masked lanes, and invalid classes."""
+    from repro.core import HeapConfig, groups, queues
+    C, cap, n = 5, 48, 33
+    cfg = HeapConfig()
+    store = jnp.asarray(rng.integers(0, 10**6, (C, cap)), jnp.int32)
+    front = jnp.asarray(rng.integers(0, 100, C), jnp.int32)
+    back = front + jnp.asarray(rng.integers(0, cap + 1, C), jnp.int32)
+    q = queues.RingState(store=store, front=front, back=back)
+    cls = jnp.asarray(rng.integers(0, C + 1, n), jnp.int32)
+    mask = jnp.asarray(rng.random(n) < 0.8) & (cls < C)
+    rank, _ = groups.masked_rank(cls, mask, C)
+
+    q_ref, _, v_ref = queues.ring_bulk_dequeue(cfg, q, None, cls, rank,
+                                               mask)
+    v_ker, nf = ops.ring_txn_pop(store, front, back, cls, mask,
+                                 limit=False)
+    np.testing.assert_array_equal(np.asarray(v_ref), np.asarray(v_ker))
+    np.testing.assert_array_equal(np.asarray(q_ref.front), np.asarray(nf))
+
+
+def test_ring_txn_push_matches_bulk_enqueue(rng):
+    from repro.core import HeapConfig, groups, queues
+    C, cap, n = 4, 32, 21
+    cfg = HeapConfig()
+    store = jnp.asarray(rng.integers(0, 10**6, (C, cap)), jnp.int32)
+    back = jnp.asarray(rng.integers(0, 100, C), jnp.int32)
+    q = queues.RingState(store=store, front=back - 3, back=back)
+    cls = jnp.asarray(rng.integers(0, C + 1, n), jnp.int32)
+    mask = jnp.asarray(rng.random(n) < 0.8) & (cls < C)
+    vals = jnp.asarray(rng.integers(0, 10**6, n), jnp.int32)
+    rank, _ = groups.masked_rank(cls, mask, C)
+
+    q_ref, _ = queues.ring_bulk_enqueue(cfg, q, None, cls, rank, vals,
+                                        mask)
+    st_ker, nb = ops.ring_txn_push(store, back, cls, vals, mask)
+    np.testing.assert_array_equal(np.asarray(q_ref.store),
+                                  np.asarray(st_ker))
+    np.testing.assert_array_equal(np.asarray(q_ref.back), np.asarray(nb))
+
+
+@pytest.mark.parametrize("ppc,bw", [(32, 1), (128, 4)])
+def test_chunk_txn_claim_matches_select_free_pages(ppc, bw, rng):
+    from repro.core import chunk_alloc
+    for take in (0, 3, 10**4):
+        row = jnp.asarray(
+            rng.integers(0, 2**32, bw, dtype=np.uint64), jnp.uint32)
+        pi_ref, sel_ref = chunk_alloc._select_free_pages(
+            row, ppc, jnp.int32(take))
+        pi, nrow, nsel = ops.chunk_txn_claim(row, jnp.int32(take), ppc=ppc)
+        np.testing.assert_array_equal(np.asarray(pi_ref), np.asarray(pi))
+        np.testing.assert_array_equal(np.asarray(sel_ref),
+                                      np.asarray(pi) >= 0)
+        assert int(nsel[0]) == int(np.asarray(sel_ref).sum())
+        # claimed bits set, nothing else changed
+        got = np.asarray(nrow)
+        exp = np.asarray(row).copy()
+        for p in np.asarray(pi):
+            if p >= 0:
+                exp[p // 32] |= np.uint32(1) << np.uint32(p % 32)
+        np.testing.assert_array_equal(exp, got)
 
 
 def test_paged_attention_kernel_matches_serving_path(rng):

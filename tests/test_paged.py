@@ -132,6 +132,7 @@ def test_kv_allocator_page_space(rng):
     assert (np.asarray(offs2) >= 0).sum() >= (np.asarray(offs) >= 0).sum()
 
 
+@pytest.mark.slow
 def test_ring_page_table_window(rng):
     """Ring tables: a window-bounded table serves an unbounded sequence
     (slot = page mod P); attention over the ring equals dense attention

@@ -34,6 +34,7 @@ def _batch(cfg, rng, s=S):
     return batch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ALL_ARCHS)
 def test_arch_smoke_forward_and_train_step(arch, rng):
     """One forward + one optimizer step on the reduced config: output
@@ -66,6 +67,7 @@ FAMILY_REPS = ["qwen2-0.5b", "mixtral-8x7b", "mamba2-780m",
                "recurrentgemma-9b", "seamless-m4t-large-v2"]
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", FAMILY_REPS)
 def test_decode_matches_forward(arch, rng):
     """Paged-KV/stateful decode reproduces the train-mode forward

@@ -36,6 +36,7 @@ def test_loss_descends_over_steps(rng):
     assert losses[-1] < losses[0] - 0.5, losses
 
 
+@pytest.mark.slow
 def test_microbatch_equivalence(rng):
     """k-way grad accumulation == single big batch (same update)."""
     cfg, m, opt = _setup()
