@@ -98,6 +98,27 @@ def figure_rows(variant: str, quick: bool = False,
     return rows
 
 
+def pallas_calls_per_txn(variant: str, backend: str = "pallas"):
+    """(alloc, free) pallas_call launch counts for one bulk transaction,
+    read off the jaxpr — the proof of single-kernel fusion the arena
+    refactor claims (1/1 for "pallas", 0/0 for "jnp").  Uses a small
+    heap: the count is layout-independent and tracing stays cheap."""
+    from repro.kernels.ops import count_pallas_calls as count
+
+    cfg = HeapConfig(total_bytes=1 << 16, chunk_bytes=1 << 11,
+                     min_page_bytes=16)
+    ouro = Ouroboros(cfg, variant, backend)
+    st = ouro.init()
+    sizes = jnp.full(16, 64, jnp.int32)
+    mask = jnp.ones(16, bool)
+    offs = jnp.full(16, -1, jnp.int32)
+    ja = jax.make_jaxpr(lambda s, z, m: ouro.alloc(s, z, m))(
+        st, sizes, mask)
+    jf = jax.make_jaxpr(lambda s, o, z, m: ouro.free(s, o, z, m))(
+        st, offs, sizes, mask)
+    return count(ja), count(jf)
+
+
 def alloc_comparison_cell(variant: str, *, quick: bool = False):
     """One jnp-vs-pallas cell per variant for BENCH_alloc.json — the
     perf-trajectory artifact future PRs diff against."""

@@ -8,9 +8,11 @@ avg-subsequent, free time, per-alloc ns, data-integrity check).
 ``--backend`` selects the allocator transaction implementation; with
 ``both``, every figure cell is reported for the jnp reference path and
 the fused Pallas kernel path side by side.  ``--alloc-json PATH``
-additionally writes a compact jnp-vs-pallas comparison per variant
-(``BENCH_alloc.json``) so future PRs have a perf trajectory to diff
-against.
+**appends** a run record — platform, git sha, per-variant jnp-vs-pallas
+cells, and the pallas launches-per-transaction counts proving
+single-kernel fusion — so ``BENCH_alloc.json`` accumulates a perf
+trajectory across PRs instead of overwriting it (records made before
+the append format are migrated in place as the first run).
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--fig fig1_page]
         [--backend jnp|pallas|both] [--alloc-json BENCH_alloc.json]
@@ -20,6 +22,8 @@ from __future__ import annotations
 import argparse
 import importlib
 import json
+import os
+import subprocess
 
 FIGS = ["fig1_page", "fig2_chunk", "fig3_va_page", "fig4_vl_page",
         "fig5_va_chunk", "fig6_vl_chunk"]
@@ -59,17 +63,79 @@ def main(argv=None) -> None:
 
     if args.alloc_json:
         import jax
-        from benchmarks.common import alloc_comparison_cell
+        from benchmarks.common import (alloc_comparison_cell,
+                                       pallas_calls_per_txn)
         from repro.core import VARIANTS
-        report = {v: alloc_comparison_cell(v, quick=args.quick)
-                  for v in VARIANTS}
+
+        launches = {}
+        for v in VARIANTS:
+            a, f = pallas_calls_per_txn(v, "pallas")
+            launches[v] = {"alloc": a, "free": f}
+            print(f"launches_per_txn,{v}/pallas,alloc={a} free={f}",
+                  flush=True)
+
         # pallas timings on a non-TPU platform are interpret-mode and
         # only the jnp column is a perf signal there; record which.
-        report["_meta"] = {"platform": jax.default_backend(),
-                           "quick": bool(args.quick)}
-        with open(args.alloc_json, "w") as f:
-            json.dump(report, f, indent=2, sort_keys=True)
-        print(f"wrote {args.alloc_json}", flush=True)
+        record = {
+            "platform": jax.default_backend(),
+            "git_sha": _git_sha(),
+            "quick": bool(args.quick),
+            "launches_per_txn": launches,
+            "variants": {v: alloc_comparison_cell(v, quick=args.quick)
+                         for v in VARIANTS},
+        }
+        runs = _load_runs(args.alloc_json)
+        runs.append(record)
+        # atomic replace: a failure mid-dump must not truncate the
+        # trajectory file the append format exists to preserve.
+        tmp = args.alloc_json + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"runs": runs}, f, indent=2, sort_keys=True)
+        os.replace(tmp, args.alloc_json)
+        print(f"appended run {len(runs)} to {args.alloc_json}", flush=True)
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.check_output(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            stderr=subprocess.DEVNULL).decode().strip()
+    except Exception:
+        return "unknown"
+
+
+def _load_runs(path: str) -> list:
+    """Existing run records; a pre-append-format file (one flat
+    jnp-vs-pallas report with ``_meta``) becomes run #1.  An
+    unparseable file raises instead of being overwritten — the whole
+    point of the append format is never to lose the trajectory."""
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        try:
+            data = json.load(f)
+        except ValueError as e:
+            raise SystemExit(
+                f"{path} exists but is not valid JSON ({e}); refusing "
+                f"to overwrite the perf trajectory — fix or move the "
+                f"file and rerun") from e
+    if isinstance(data, dict) and isinstance(data.get("runs"), list):
+        return data["runs"]
+    if isinstance(data, dict) and "runs" in data:
+        # new-format marker with a mangled value: never "migrate" it.
+        raise SystemExit(
+            f"{path} has a 'runs' key that is not a list; refusing to "
+            f"rewrite a damaged trajectory file")
+    if isinstance(data, dict) and data:
+        meta = data.pop("_meta", {})
+        return [{"platform": meta.get("platform", "unknown"),
+                 "git_sha": "pre-append-format",
+                 "quick": meta.get("quick"),
+                 "variants": data}]
+    raise SystemExit(
+        f"{path} holds unrecognized JSON (neither a runs list nor a "
+        f"legacy report); refusing to overwrite it")
 
 
 if __name__ == "__main__":

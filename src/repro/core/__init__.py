@@ -3,7 +3,9 @@
 The paper's contribution (Standish 2025 / Winter et al. ICS'20) lives
 here — see DESIGN.md §1-2 for the GPU→TPU mechanism mapping.
 """
+from repro.core.arena import Arena, ArenaLayout
 from repro.core.heap import HeapConfig
 from repro.core.ouroboros import BACKENDS, Ouroboros, VARIANTS
 
-__all__ = ["BACKENDS", "HeapConfig", "Ouroboros", "VARIANTS"]
+__all__ = ["Arena", "ArenaLayout", "BACKENDS", "HeapConfig", "Ouroboros",
+           "VARIANTS"]

@@ -1,0 +1,252 @@
+"""Device-resident arena: the whole allocator state as two flat arrays.
+
+The nested NamedTuple pytrees that PR 1 threaded through every
+transaction (``RingState`` / ``VirtState`` / ``AllocCtx`` /
+``ChunkMeta``) are now *views*: the state that actually lives on device
+— and that ``Ouroboros.init`` returns — is an :class:`Arena` of
+
+    ``mem``  one int32 word image holding, at fixed offsets, the heap
+             proper, the free-chunk pool ring, the class queue ring (or
+             the virtualized segment directory), and — for chunk
+             allocators — the occupancy bitmaps, free counts, and
+             chunk→class bindings;
+    ``ctl``  one small int32 control block holding every counter:
+             per-class ``front``/``back``, the vl ``head``/``tail``
+             chunk ids, and the pool's front/back.
+
+Word offsets are static functions of ``(HeapConfig, kind, family)``
+computed here (extending the scale-free layout math of ``heap.py``),
+so one ``pallas_call`` can execute an entire transaction — including
+the va/vl segment walk — against ``mem``/``ctl`` without any host
+round trip, and the jnp oracle operates on the *same* layout
+(``tests/test_alloc_txn_parity.py`` compares arenas word for word).
+
+The offset table is documented in DESIGN.md §7; ``describe()`` renders
+it from the live layout so the doc can never drift silently.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import queues
+from repro.core.chunk_alloc import ChunkMeta
+from repro.core.heap import HeapConfig
+
+KINDS = ("page", "chunk")
+QUEUE_FAMILIES = ("ring", "va", "vl")
+
+
+class Arena(NamedTuple):
+    """The flat device-resident allocator state (see module docstring)."""
+    mem: Any  # (layout.mem_words,) int32
+    ctl: Any  # (layout.ctl_words,) int32
+
+
+@dataclasses.dataclass(frozen=True)
+class Region:
+    """One named window of ``mem``: ``[offset, offset + words)``."""
+    name: str
+    offset: int
+    shape: Tuple[int, ...]
+
+    @property
+    def words(self) -> int:
+        return math.prod(self.shape)
+
+    @property
+    def end(self) -> int:
+        return self.offset + self.words
+
+
+@dataclasses.dataclass(frozen=True)
+class ArenaLayout:
+    """Static word layout of one (cfg, kind, family) arena."""
+    cfg: HeapConfig
+    kind: str
+    family: str
+    regions: Tuple[Region, ...]         # contiguous, in mem order
+    # ctl block offsets (front/back/head/tail are C words each)
+    num_classes: int
+    queue_capacity: int                 # ring slots (ring) / items bound
+    max_segs: int                       # directory ring width (va/vl)
+
+    @property
+    def mem_words(self) -> int:
+        return self.regions[-1].end
+
+    @property
+    def ctl_words(self) -> int:
+        return 4 * self.num_classes + 2
+
+    def region(self, name: str) -> Region:
+        for r in self.regions:
+            if r.name == name:
+                return r
+        raise KeyError(f"arena({self.kind},{self.family}) has no region "
+                       f"{name!r}")
+
+    def has(self, name: str) -> bool:
+        return any(r.name == name for r in self.regions)
+
+    # ctl offsets -----------------------------------------------------------
+    @property
+    def off_front(self) -> int:
+        return 0
+
+    @property
+    def off_back(self) -> int:
+        return self.num_classes
+
+    @property
+    def off_head(self) -> int:
+        return 2 * self.num_classes
+
+    @property
+    def off_tail(self) -> int:
+        return 3 * self.num_classes
+
+    @property
+    def off_pool_front(self) -> int:
+        return 4 * self.num_classes
+
+    @property
+    def off_pool_back(self) -> int:
+        return 4 * self.num_classes + 1
+
+    def describe(self) -> str:
+        """Human-readable offset table (DESIGN.md §7 is rendered from
+        this, and a test pins the two together)."""
+        lines = [f"arena(kind={self.kind}, family={self.family}): "
+                 f"mem {self.mem_words} words, ctl {self.ctl_words} words"]
+        for r in self.regions:
+            lines.append(f"  mem[{r.offset}:{r.end}]  {r.name} {r.shape}")
+        C = self.num_classes
+        for nm, off, w in (("front", self.off_front, C),
+                           ("back", self.off_back, C),
+                           ("head", self.off_head, C),
+                           ("tail", self.off_tail, C),
+                           ("pool_front", self.off_pool_front, 1),
+                           ("pool_back", self.off_pool_back, 1)):
+            lines.append(f"  ctl[{off}:{off + w}]  {nm}")
+        return "\n".join(lines)
+
+
+def queue_capacity(cfg: HeapConfig, kind: str) -> int:
+    """Items the class queues must hold: every page of a class share
+    (page kind) or every chunk id (chunk kind)."""
+    if kind == "page":
+        return cfg.data_chunks_per_class * cfg.pages_per_chunk(0)
+    return cfg.num_chunks
+
+
+@functools.lru_cache(maxsize=None)
+def layout(cfg: HeapConfig, kind: str, family: str) -> ArenaLayout:
+    """Compute the static arena layout for one allocator variant."""
+    if kind not in KINDS:
+        raise ValueError(f"unknown kind {kind!r}; pick from {KINDS}")
+    if family not in QUEUE_FAMILIES:
+        raise ValueError(
+            f"unknown family {family!r}; pick from {QUEUE_FAMILIES}")
+    C = cfg.num_classes
+    cap = queue_capacity(cfg, kind)
+    max_segs = cap // cfg.slots_per_segment(family) + 2
+
+    regions = [Region("heap", 0, (cfg.total_words,))]
+
+    def add(name, shape):
+        regions.append(Region(name, regions[-1].end, shape))
+
+    add("pool_store", (1, cfg.num_chunks))
+    if family == "ring":
+        add("queue_store", (C, cap))
+    else:
+        add("directory", (C, max_segs))
+    if kind == "chunk":
+        add("bitmap", (cfg.num_chunks, cfg.bitmap_words_per_chunk))
+        add("free_count", (cfg.num_chunks,))
+        add("chunk_class", (cfg.num_chunks,))
+
+    return ArenaLayout(cfg=cfg, kind=kind, family=family,
+                       regions=tuple(regions), num_classes=C,
+                       queue_capacity=cap, max_segs=max_segs)
+
+
+# --------------------------------------------------------------------------
+# pack / unpack: arena words <-> the legacy view pytrees
+# --------------------------------------------------------------------------
+
+def _take(lay: ArenaLayout, mem, name: str):
+    r = lay.region(name)
+    return jax.lax.slice(mem, (r.offset,), (r.end,)).reshape(r.shape)
+
+
+def pack(lay: ArenaLayout, q, ctx: queues.AllocCtx,
+         meta: Optional[ChunkMeta]) -> Arena:
+    """Flatten the view pytrees into one (mem, ctl) arena."""
+    C = lay.num_classes
+    parts = [ctx.heap, ctx.pool.store.reshape(-1)]
+    if lay.family == "ring":
+        parts.append(q.store.reshape(-1))
+        head = tail = jnp.zeros(C, jnp.int32)
+    else:
+        parts.append(q.directory.reshape(-1))
+        head, tail = q.head, q.tail
+    if lay.kind == "chunk":
+        parts.append(jax.lax.bitcast_convert_type(
+            meta.bitmap, jnp.int32).reshape(-1))
+        parts.append(meta.free_count)
+        parts.append(meta.chunk_class)
+    mem = jnp.concatenate(parts)
+    ctl = jnp.concatenate([q.front, q.back, head, tail,
+                           ctx.pool.front, ctx.pool.back]).astype(jnp.int32)
+    return Arena(mem=mem, ctl=ctl)
+
+
+def unpack(lay: ArenaLayout, arena: Arena):
+    """Rebuild the (q, ctx, meta) views from arena words.  Pure static
+    slices/reshapes — XLA fuses them away, so the views cost nothing."""
+    C = lay.num_classes
+    mem, ctl = arena.mem, arena.ctl
+    front = jax.lax.slice(ctl, (lay.off_front,), (lay.off_front + C,))
+    back = jax.lax.slice(ctl, (lay.off_back,), (lay.off_back + C,))
+    pool = queues.RingState(
+        store=_take(lay, mem, "pool_store"),
+        front=jax.lax.slice(ctl, (lay.off_pool_front,),
+                            (lay.off_pool_front + 1,)),
+        back=jax.lax.slice(ctl, (lay.off_pool_back,),
+                           (lay.off_pool_back + 1,)))
+    ctx = queues.AllocCtx(heap=heap_of(lay, arena), pool=pool)
+    if lay.family == "ring":
+        q = queues.RingState(store=_take(lay, mem, "queue_store"),
+                             front=front, back=back)
+    else:
+        q = queues.VirtState(
+            directory=_take(lay, mem, "directory"),
+            head=jax.lax.slice(ctl, (lay.off_head,), (lay.off_head + C,)),
+            tail=jax.lax.slice(ctl, (lay.off_tail,), (lay.off_tail + C,)),
+            front=front, back=back)
+    meta = None
+    if lay.kind == "chunk":
+        meta = ChunkMeta(
+            bitmap=jax.lax.bitcast_convert_type(
+                _take(lay, mem, "bitmap"), jnp.uint32),
+            free_count=_take(lay, mem, "free_count"),
+            chunk_class=_take(lay, mem, "chunk_class"))
+    return q, ctx, meta
+
+
+def heap_of(lay: ArenaLayout, arena: Arena):
+    """View of the heap proper (the paper's word array) inside ``mem``."""
+    return jax.lax.slice(arena.mem, (0,), (lay.cfg.total_words,))
+
+
+def with_heap(lay: ArenaLayout, arena: Arena, heap) -> Arena:
+    """Arena with the heap region replaced (offset 0, so one update)."""
+    return arena._replace(
+        mem=jax.lax.dynamic_update_slice(arena.mem, heap, (0,)))

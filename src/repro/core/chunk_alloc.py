@@ -15,6 +15,12 @@ bound to its size class once claimed; GPU Ouroboros can reflag an
 emptied chunk back to the global pool mid-queue, which requires the
 lock-free flag dance we have no atomics for.  `compact()` on the host
 rebuilds the binding (used by the serving engine between batches).
+
+Like page_alloc, this module is now the chunk-kind transaction *math*
+under the core/transactions.py dispatcher: state arrives as views of
+the flat arena (bitmaps/free counts/bindings at fixed word offsets of
+``mem``), and the same body runs as the jnp oracle and inside the
+fused single-kernel Pallas transaction.
 """
 from __future__ import annotations
 
@@ -190,8 +196,10 @@ def free(cfg: HeapConfig, family_name: str, state: AllocState,
 
     meta = state.meta
     chunk = offsets_words // cfg.words_per_chunk
-    pw_per_cls = jnp.array([cfg.page_words(c) for c in range(C)], jnp.int32)
-    page_idx = (offsets_words % cfg.words_per_chunk) // pw_per_cls[cls % C]
+    # page_words(c) = min_page_words << c, computed as a shift so no
+    # table constant is captured inside the fused arena kernel.
+    pw = jnp.left_shift(cfg.page_words(0), cls % C).astype(jnp.int32)
+    page_idx = (offsets_words % cfg.words_per_chunk) // pw
 
     old_free = meta.free_count  # snapshot before clearing
     meta = _set_bits(meta, chunk, page_idx, valid, -1)

@@ -100,6 +100,19 @@ class HeapConfig:
     def chunk_word_base(self, chunk_id: int) -> int:
         return chunk_id * self.words_per_chunk
 
+    @property
+    def data_chunks_per_class(self) -> int:
+        """Even chunk split for page allocators, with one class-share
+        held back for virtualized queue segments (their worst-case need
+        is ~share/2 chunks)."""
+        return max(1, self.num_chunks // (self.num_classes + 1))
+
+    def slots_per_segment(self, family: str) -> int:
+        """Queue items one heap-chunk segment holds.  vl segments
+        reserve word 0 for the next pointer; ring queues don't live in
+        chunks but the bound keeps arena layouts uniform."""
+        return self.words_per_chunk - (1 if family == "vl" else 0)
+
 
 def size_to_class_device(cfg: HeapConfig, sizes):
     """Vectorized size→class mapping (device math, jit-safe).
@@ -107,16 +120,19 @@ def size_to_class_device(cfg: HeapConfig, sizes):
     ``sizes`` in bytes; returns int32 class ids.  Sizes above the chunk
     size map to ``num_classes`` (an invalid class — callers treat it as
     an allocation failure, matching the GPU original which returns
-    nullptr for over-large requests).
+    nullptr for over-large requests).  Negative sizes — which is what a
+    >2 GiB request looks like after the int32 cast — are over-large by
+    definition and map to ``num_classes`` too, never to a small class.
     """
     import jax.numpy as jnp
 
-    sizes = jnp.maximum(sizes.astype(jnp.int32), cfg.min_page_bytes)
+    raw = sizes.astype(jnp.int32)
+    sizes = jnp.maximum(raw, cfg.min_page_bytes)
     # ceil(log2(s)) via bit twiddling on ints: position of MSB of (s-1)+1.
     bits = 32 - _clz32(sizes - 1)
     c = bits - _log2i(cfg.min_page_bytes)
-    return jnp.where(sizes > cfg.chunk_bytes, cfg.num_classes, c).astype(
-        jnp.int32)
+    return jnp.where((raw < 0) | (sizes > cfg.chunk_bytes),
+                     cfg.num_classes, c).astype(jnp.int32)
 
 
 def _clz32(x):

@@ -12,18 +12,23 @@ Variant ids match the paper's driver programs (§3):
 Public API (all jit-safe, functional):
 
     ouro = Ouroboros(cfg, "va_page", backend="pallas")
-    state = ouro.init()
+    state = ouro.init()                              # core.arena.Arena
     state, offs = ouro.alloc(state, sizes_bytes, mask)   # offs in words, -1 = fail
     state = ouro.free(state, offs, sizes_bytes, mask)
     heap  = write_pattern(state, offs, sizes_bytes, tag) # benchmark helpers
     ok    = check_pattern(state, offs, sizes_bytes, tag)
 
-``backend`` selects the transaction implementation: ``"jnp"`` (default)
-is the pure-XLA reference path, ``"pallas"`` routes alloc/free through
-the fused device kernels in kernels/alloc_txn.py (interpret mode on
-CPU).  Both backends are bit-identical — the jnp path is the oracle for
+State is the flat device-resident **arena** (core/arena.py): one int32
+word image ``state.mem`` (heap + pool ring + class queue ring or
+segment directory + chunk bitmaps, at fixed offsets) plus one int32
+control block ``state.ctl`` (every counter).  ``backend`` selects the
+transaction implementation: ``"jnp"`` (default) is the pure-XLA
+reference path, ``"pallas"`` executes each whole transaction —
+including the va/vl segment walk — as ONE fused ``pallas_call``
+(kernels/alloc_txn.arena_*_txn; interpret mode on CPU).  Both backends
+are bit-identical — the jnp path is the oracle for
 tests/test_alloc_txn_parity.py — and share ``init`` state, so a heap
-can switch backends mid-stream.
+can switch backends mid-stream (also asserted there).
 """
 from __future__ import annotations
 
@@ -33,7 +38,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core import chunk_alloc, page_alloc
+from repro.core import arena, transactions
 from repro.core.heap import HeapConfig
 
 VARIANTS = ("page", "chunk", "va_page", "vl_page", "va_chunk", "vl_chunk")
@@ -64,44 +69,51 @@ class Ouroboros:
                 f"unknown backend {self.backend!r}; pick from {BACKENDS}")
 
     @property
-    def _impl(self):
-        kind, _ = _split(self.variant)
-        return page_alloc if kind == "page" else chunk_alloc
+    def kind(self) -> str:
+        return _split(self.variant)[0]
 
     @property
-    def _family(self):
+    def family(self) -> str:
         return _split(self.variant)[1]
 
-    def init(self):
-        return self._impl.init(self.cfg, self._family)
+    @property
+    def layout(self) -> arena.ArenaLayout:
+        """The static word layout of this variant's arena."""
+        return arena.layout(self.cfg, self.kind, self.family)
+
+    def init(self) -> arena.Arena:
+        return transactions.init(self.cfg, self.kind, self.family)
 
     @functools.partial(jax.jit, static_argnums=0, donate_argnums=1)
     def alloc(self, state, sizes_bytes, mask):
-        return self._impl.alloc(self.cfg, self._family, state,
-                                sizes_bytes, mask, self.backend)
+        return transactions.alloc(self.cfg, self.kind, self.family,
+                                  state, sizes_bytes, mask, self.backend)
 
     @functools.partial(jax.jit, static_argnums=0, donate_argnums=1)
     def free(self, state, offsets_words, sizes_bytes, mask):
-        return self._impl.free(self.cfg, self._family, state,
-                               offsets_words, sizes_bytes, mask,
-                               self.backend)
+        return transactions.free(self.cfg, self.kind, self.family, state,
+                                 offsets_words, sizes_bytes, mask,
+                                 self.backend)
 
     def compact(self, state):
-        if self._impl is not chunk_alloc:
-            return state
-        return chunk_alloc.compact(self.cfg, self._family, state)
+        return transactions.compact(self.cfg, self.kind, self.family,
+                                    state)
+
+    def heap(self, state: arena.Arena):
+        """The heap proper (the paper's word array) inside the arena."""
+        return arena.heap_of(self.layout, state)
 
     # -- benchmark data path (paper §3: "writing some data, checking that
     #    the data is correct when read back") -------------------------------
     @functools.partial(jax.jit, static_argnums=0, donate_argnums=1)
     def write_pattern(self, state, offsets_words, sizes_bytes, tag):
-        heap = write_words(self.cfg, state.ctx.heap, offsets_words,
+        heap = write_words(self.cfg, self.heap(state), offsets_words,
                            sizes_bytes, tag)
-        return state._replace(ctx=state.ctx._replace(heap=heap))
+        return arena.with_heap(self.layout, state, heap)
 
     @functools.partial(jax.jit, static_argnums=0)
     def check_pattern(self, state, offsets_words, sizes_bytes, tag):
-        return check_words(self.cfg, state.ctx.heap, offsets_words,
+        return check_words(self.cfg, self.heap(state), offsets_words,
                            sizes_bytes, tag)
 
 
@@ -116,7 +128,10 @@ def _word_grid(cfg: HeapConfig, offsets_words, sizes_bytes):
 
 
 def write_words(cfg, heap, offsets_words, sizes_bytes, tag):
-    """Fill each allocation with ``tag[i]`` (one distinct word per alloc)."""
+    """Fill each allocation with ``tag[i]`` (one distinct word per alloc).
+
+    ``heap`` must be the heap *view* (``cfg.total_words`` long), never
+    the whole arena image: dropped lanes index one-past-the-end."""
     words, ok = _word_grid(cfg, offsets_words, sizes_bytes)
     vals = jnp.broadcast_to(tag[:, None], words.shape)
     return heap.at[jnp.where(ok, words, heap.shape[0])].set(

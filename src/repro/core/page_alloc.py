@@ -19,14 +19,15 @@ import jax.numpy as jnp
 from repro.core import groups, queues
 from repro.core.heap import HeapConfig, size_to_class_device
 
-# ``backend="pallas"`` (validated by core/ouroboros.BACKENDS) routes
-# the whole alloc/free transaction through the fused device kernels
-# (kernels/alloc_txn.py): rank, grant, ring window pop/push, and
-# counter advance in a single pallas_call instead of today's ~dozen-op
-# jnp chain.  Virtualized families keep the heap segment walk in jnp
-# but run their chunk-pool transactions through the same kernels.
-# Bit-exact parity with the jnp reference path is enforced by
-# tests/test_alloc_txn_parity.py.
+# Since the arena refactor this module is the page-kind *transaction
+# math*: core/transactions.py unpacks the flat arena (core/arena.py)
+# into the view pytrees below, runs these functions with the backend
+# pinned to "jnp", and repacks — and the Pallas backend executes the
+# very same body inside one fused kernel (kernels/alloc_txn.
+# arena_*_txn), segment walk included.  The local ``backend="pallas"``
+# branches below survive for the piecewise PR-1 kernels, which
+# tests/test_kernels.py still validates in isolation; bit-exact parity
+# of the full transactions is enforced by tests/test_alloc_txn_parity.py.
 
 
 class AllocState(NamedTuple):
@@ -37,8 +38,9 @@ class AllocState(NamedTuple):
 
 def data_chunks_per_class(cfg: HeapConfig) -> int:
     """Even split with one class-share held back for virtualized queue
-    segments (their worst-case need is ~share/2 chunks)."""
-    return max(1, cfg.num_chunks // (cfg.num_classes + 1))
+    segments (moved to HeapConfig so core/arena.py sizes the queue
+    region from the same bound)."""
+    return cfg.data_chunks_per_class
 
 
 def init(cfg: HeapConfig, family_name: str) -> AllocState:

@@ -26,9 +26,14 @@ queue *segments* touched per transaction is bounded statically by
 
 Every bulk function takes a trailing ``backend`` argument: ``"jnp"``
 (default) is the reference gather/scatter path, ``"pallas"`` routes
-ring transactions — including the chunk pool the virtualized families
-grow/shrink against — through the fused kernels in
-kernels/alloc_txn.py (bit-identical; see DESIGN.md §4).
+ring transactions through the piecewise PR-1 kernels in
+kernels/alloc_txn.py.  Production transactions no longer thread
+through that flag: core/transactions.py runs this module's jnp path as
+the body of BOTH backends — directly as the oracle, and inside the
+single fused arena kernel for ``backend="pallas"`` (DESIGN.md §4, §7).
+State arrives as zero-cost views unpacked from the flat arena
+(core/arena.py), where queue rings, directories, and counters live at
+fixed word offsets.
 """
 from __future__ import annotations
 
@@ -39,7 +44,10 @@ import jax.numpy as jnp
 from repro.core import groups
 from repro.core.heap import HeapConfig
 
-NULL = jnp.int32(-1)
+# A Python int (not a jnp scalar): module-level jnp constants would be
+# captured as jaxpr consts inside the fused arena kernels, which Pallas
+# kernel tracing rejects; int literals weaken to int32 everywhere used.
+NULL = -1
 
 
 class RingState(NamedTuple):
@@ -167,8 +175,9 @@ def pool_enqueue(cfg: HeapConfig, pool: RingState, chunks, mask,
 # --------------------------------------------------------------------------
 
 def _slots_per_seg(cfg: HeapConfig, family: str) -> int:
-    # vl segments reserve word 0 for the next pointer.
-    return cfg.words_per_chunk - (1 if family == "vl" else 0)
+    # vl segments reserve word 0 for the next pointer; the math lives
+    # on HeapConfig so core/arena.py sizes directories identically.
+    return cfg.slots_per_segment(family)
 
 
 def _grow_counts(counts, back, spc):

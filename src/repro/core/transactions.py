@@ -1,0 +1,114 @@
+"""Unified allocator transactions over the device-resident arena.
+
+This is the single dispatcher the ISSUE calls for: every variant is a
+``(kind, family)`` pair — ``kind`` picks the item algorithm (page
+inventory vs chunk bitmap claim, the former ``page_alloc``/
+``chunk_alloc`` split) and ``family`` the queue machinery (ring / va /
+vl) — and every transaction runs against one :class:`arena.Arena`.
+
+Two execution paths share one body:
+
+``*_math``   the pure transaction math ``(mem, ctl, …) → (mem', ctl', …)``.
+             It unpacks the arena into the legacy view pytrees, runs the
+             jnp reference algorithms (``page_alloc``/``chunk_alloc``
+             with their internal backend pinned to ``"jnp"``), and packs
+             the result.  Views are static slices — XLA sees one fused
+             program over two flat arrays.
+
+``alloc``/``free``   the public dispatcher.  ``backend="jnp"`` calls the
+             math directly (the oracle); ``backend="pallas"`` hands the
+             *same* math to ``kernels/alloc_txn.arena_alloc_txn`` /
+             ``arena_free_txn``, which execute the entire transaction —
+             masked rank, inventory grant, ring pop/push, chunk-bitmap
+             claim, and the va/vl segment walk with its grow/shrink
+             against the chunk pool — inside ONE ``pallas_call``.
+             Sharing the body makes bit-exact parity structural, and
+             tests/test_alloc_txn_parity.py enforces it word for word;
+             tests also assert the one-kernel property on the jaxpr.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+from repro.core import arena, chunk_alloc, page_alloc
+from repro.core.heap import HeapConfig
+from repro.core.page_alloc import AllocState
+
+
+def _impl(kind: str):
+    return page_alloc if kind == "page" else chunk_alloc
+
+
+def _views(cfg: HeapConfig, kind: str, family: str, mem, ctl):
+    lay = arena.layout(cfg, kind, family)
+    q, ctx, meta = arena.unpack(lay, arena.Arena(mem, ctl))
+    return lay, AllocState(q=q, ctx=ctx, meta=meta)
+
+
+def init(cfg: HeapConfig, kind: str, family: str) -> arena.Arena:
+    """Build the arena (backend-free, so a live heap can switch
+    backends mid-stream — asserted by the parity tests)."""
+    lay = arena.layout(cfg, kind, family)
+    st = _impl(kind).init(cfg, family)
+    return arena.pack(lay, st.q, st.ctx, st.meta)
+
+
+# ---- pure transaction math (shared by both backends) ----------------------
+
+def alloc_math(cfg: HeapConfig, kind: str, family: str, mem, ctl,
+               sizes_bytes, mask) -> Tuple:
+    lay, st = _views(cfg, kind, family, mem, ctl)
+    st, offs = _impl(kind).alloc(cfg, family, st, sizes_bytes, mask, "jnp")
+    new = arena.pack(lay, st.q, st.ctx, st.meta)
+    return new.mem, new.ctl, offs
+
+
+def free_math(cfg: HeapConfig, kind: str, family: str, mem, ctl,
+              offsets_words, sizes_bytes, mask) -> Tuple:
+    lay, st = _views(cfg, kind, family, mem, ctl)
+    st = _impl(kind).free(cfg, family, st, offsets_words, sizes_bytes,
+                          mask, "jnp")
+    new = arena.pack(lay, st.q, st.ctx, st.meta)
+    return new.mem, new.ctl
+
+
+# ---- public dispatcher ----------------------------------------------------
+
+def alloc(cfg: HeapConfig, kind: str, family: str, state: arena.Arena,
+          sizes_bytes, mask, backend: str = "jnp"):
+    """One bulk allocation transaction.  Returns (arena', word_offsets);
+    offset −1 marks a failed lane (over-large size / exhausted
+    inventory), matching the GPU original's nullptr."""
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        mem, ctl, offs = kops.arena_alloc_txn(cfg, kind, family,
+                                              state.mem, state.ctl,
+                                              sizes_bytes, mask)
+    else:
+        mem, ctl, offs = alloc_math(cfg, kind, family, state.mem,
+                                    state.ctl, sizes_bytes, mask)
+    return arena.Arena(mem=mem, ctl=ctl), offs
+
+
+def free(cfg: HeapConfig, kind: str, family: str, state: arena.Arena,
+         offsets_words, sizes_bytes, mask, backend: str = "jnp"):
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        mem, ctl = kops.arena_free_txn(cfg, kind, family, state.mem,
+                                       state.ctl, offsets_words,
+                                       sizes_bytes, mask)
+    else:
+        mem, ctl = free_math(cfg, kind, family, state.mem, state.ctl,
+                             offsets_words, sizes_bytes, mask)
+    return arena.Arena(mem=mem, ctl=ctl)
+
+
+def compact(cfg: HeapConfig, kind: str, family: str,
+            state: arena.Arena) -> arena.Arena:
+    """Host-triggered defragmentation pass (chunk kinds only; DESIGN.md
+    §5b).  Rebuilt queues repack into the identical layout."""
+    if kind != "chunk":
+        return state
+    lay, st = _views(cfg, kind, family, state.mem, state.ctl)
+    st = chunk_alloc.compact(cfg, family, st)
+    return arena.pack(lay, st.q, st.ctx, st.meta)

@@ -22,6 +22,21 @@ one whole bulk transaction into a single ``pallas_call`` per family:
     bit claim, and the free-count delta, fused into one kernel over a
     chunk's occupancy-bitmap row.
 
+``arena_alloc_txn`` / ``arena_free_txn`` — the arena-era full fusion:
+    ONE ``pallas_call`` executes an *entire* bulk transaction for any of
+    the six variants against the flat device-resident arena
+    (core/arena.py): masked rank, inventory grant, ring pop/push, the
+    chunk-bitmap claim loop, and — for the virtualized families — the
+    whole va/vl segment walk (directory chase / next-pointer chain,
+    segment grow/shrink via the chunk pool) that PR 1 still composed as
+    host-built jnp ops around the piecewise kernels above.  The kernel
+    body IS the shared transaction math (core/transactions.alloc_math /
+    free_math) applied to the ``mem``/``ctl`` refs, so parity with the
+    jnp oracle is structural rather than re-implemented; ``mem``/``ctl``
+    are input/output-aliased, making the transaction an in-place update
+    of device state.  The piecewise kernels remain as independently
+    tested building blocks (tests/test_kernels.py).
+
 Mechanism mapping (DESIGN.md §4): GPU Ouroboros mutates ``front``/
 ``back`` with per-thread atomics inside a warp-aggregated critical
 section; here the whole request vector is one grid program, the rank
@@ -249,3 +264,73 @@ def chunk_txn_claim(row, take, *, ppc: int, interpret: bool = False):
                    jax.ShapeDtypeStruct((1,), jnp.int32)],
         interpret=interpret,
     )(jnp.reshape(take, (1,)).astype(jnp.int32), row)
+
+
+# --------------------------------------------------------------------------
+# arena_alloc_txn / arena_free_txn — one kernel per whole transaction
+# --------------------------------------------------------------------------
+#
+# The kernel body loads the full mem/ctl images once, runs the shared
+# transaction math (core/transactions), and stores the new images —
+# counters, ring words, directory entries, bitmaps, and the heap words
+# the va/vl segment walk touches all mutate inside the single kernel.
+# ``input_output_aliases`` pins mem/ctl in place, so on device the call
+# is an in-place arena update with no state round trip.  The one-kernel
+# property is asserted on the lowered jaxpr by
+# tests/test_alloc_txn_parity.py::test_single_pallas_call_per_txn.
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "kind", "family", "interpret"))
+def arena_alloc_txn(cfg, kind, family, mem, ctl, sizes_bytes, mask, *,
+                    interpret: bool = False):
+    """Fused whole-transaction alloc for any (kind, family) variant.
+
+    Returns ``(new_mem, new_ctl, offsets)`` — bit-identical to
+    ``transactions.alloc_math`` (the jnp oracle), which is also the
+    kernel body."""
+    from repro.core import transactions  # lazy: kernels <-> core
+
+    n = sizes_bytes.shape[0]
+
+    def kernel(mem_ref, ctl_ref, sizes_ref, valid_ref,
+               omem_ref, octl_ref, offs_ref):
+        nm, nc, offs = transactions.alloc_math(
+            cfg, kind, family, mem_ref[...], ctl_ref[...],
+            sizes_ref[...], valid_ref[...] != 0)
+        omem_ref[...] = nm
+        octl_ref[...] = nc
+        offs_ref[...] = offs
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=[jax.ShapeDtypeStruct(mem.shape, jnp.int32),
+                   jax.ShapeDtypeStruct(ctl.shape, jnp.int32),
+                   jax.ShapeDtypeStruct((n,), jnp.int32)],
+        input_output_aliases={0: 0, 1: 1},
+        interpret=interpret,
+    )(mem, ctl, sizes_bytes.astype(jnp.int32), mask.astype(jnp.int32))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "kind", "family", "interpret"))
+def arena_free_txn(cfg, kind, family, mem, ctl, offsets_words,
+                   sizes_bytes, mask, *, interpret: bool = False):
+    """Fused whole-transaction free.  Returns ``(new_mem, new_ctl)``."""
+    from repro.core import transactions  # lazy: kernels <-> core
+
+    def kernel(mem_ref, ctl_ref, offs_ref, sizes_ref, valid_ref,
+               omem_ref, octl_ref):
+        nm, nc = transactions.free_math(
+            cfg, kind, family, mem_ref[...], ctl_ref[...],
+            offs_ref[...], sizes_ref[...], valid_ref[...] != 0)
+        omem_ref[...] = nm
+        octl_ref[...] = nc
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=[jax.ShapeDtypeStruct(mem.shape, jnp.int32),
+                   jax.ShapeDtypeStruct(ctl.shape, jnp.int32)],
+        input_output_aliases={0: 0, 1: 1},
+        interpret=interpret,
+    )(mem, ctl, offsets_words.astype(jnp.int32),
+      sizes_bytes.astype(jnp.int32), mask.astype(jnp.int32))

@@ -42,6 +42,52 @@ def chunk_txn_claim(row, take, *, ppc: int):
                                       interpret=_interpret())
 
 
+def arena_alloc_txn(cfg, kind, family, mem, ctl, sizes_bytes, mask):
+    """Whole alloc transaction (any variant) in one pallas_call."""
+    return _alloc_txn.arena_alloc_txn(cfg, kind, family, mem, ctl,
+                                      sizes_bytes, mask,
+                                      interpret=_interpret())
+
+
+def arena_free_txn(cfg, kind, family, mem, ctl, offsets_words,
+                   sizes_bytes, mask):
+    """Whole free transaction (any variant) in one pallas_call."""
+    return _alloc_txn.arena_free_txn(cfg, kind, family, mem, ctl,
+                                     offsets_words, sizes_bytes, mask,
+                                     interpret=_interpret())
+
+
+def count_pallas_calls(closed_jaxpr) -> int:
+    """Number of ``pallas_call`` eqns anywhere in a jaxpr (descending
+    into sub-jaxprs in eqn params).  The single source of truth for the
+    one-kernel-per-transaction assertions in tests/test_alloc_txn_parity
+    and the ``launches_per_txn`` proof in benchmarks/run.py."""
+    import jax.core as jc
+
+    def jaxprs_in(val):
+        if isinstance(val, jc.ClosedJaxpr):
+            yield val.jaxpr
+        elif isinstance(val, jc.Jaxpr):
+            yield val
+        elif isinstance(val, (tuple, list)):
+            for v in val:
+                yield from jaxprs_in(v)
+        elif isinstance(val, dict):
+            for v in val.values():
+                yield from jaxprs_in(v)
+
+    seen = 0
+    stack = [closed_jaxpr.jaxpr]
+    while stack:
+        jx = stack.pop()
+        for eqn in jx.eqns:
+            if eqn.primitive.name == "pallas_call":
+                seen += 1
+            for val in eqn.params.values():
+                stack.extend(jaxprs_in(val))
+    return seen
+
+
 def bitmap_select(words, k, *, block_words: int = 32):
     return _bitmap_select(words, k, block_words=block_words,
                           interpret=_interpret())

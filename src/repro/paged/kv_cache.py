@@ -114,9 +114,13 @@ def make_kv_allocator(num_pages: int, backend: str = "jnp"):
 
     Each logical page is one 256 B region of a single-size-class heap;
     ``vl_chunk`` claims chunks lazily so the full page space is usable.
-    offset//64 (words) ↔ page id.  ``backend`` selects the transaction
-    implementation (jnp reference or fused Pallas kernels) — both are
-    bit-identical, so serving behaviour is backend-invariant.
+    offset//64 (words) ↔ page id.  Allocator state is the flat
+    device-resident arena (core/arena.py) — the vl chunk queues, their
+    next-pointer chains, bitmaps, and counters all live at fixed word
+    offsets in it, so with ``backend="pallas"`` every page grant and
+    release the engine issues is ONE fused kernel launch, segment walk
+    included.  Both backends are bit-identical, so serving behaviour is
+    backend-invariant.
 
     Returns (ouro, words_per_page, physical_pages).  Queue segments live
     in the same heap (the ouroboros property), so granted ids are a

@@ -49,8 +49,10 @@ class ServingEngine:
         assert sample == "greedy"
 
         # --- the paper's allocator manages the page-id space -------------
-        # (alloc_backend="pallas" runs page grants/releases through the
-        # fused device-transaction kernels; bit-identical to "jnp")
+        # alloc_state is the flat device-resident arena (core/arena.py:
+        # one word image + one control block); alloc_backend="pallas"
+        # makes every bulk grant/release below a single fused kernel
+        # launch (vl segment walk included), bit-identical to "jnp".
         self.ouro, self.wpp, physical_pages = KV.make_kv_allocator(
             self.num_pages, backend=alloc_backend)
         self.alloc_state = self.ouro.init()
@@ -73,7 +75,10 @@ class ServingEngine:
             lambda p, t, c: model.decode_step(p, t, c,
                                               dtype=compute_dtype))
         self.stats = {"allocs": 0, "frees": 0, "steps": 0,
-                      "alloc_failures": 0}
+                      "alloc_failures": 0,
+                      # observability: device words the arena occupies
+                      "arena_mem_words": int(self.alloc_state.mem.shape[0]),
+                      "arena_ctl_words": int(self.alloc_state.ctl.shape[0])}
 
     # ---- request lifecycle -------------------------------------------------
     def submit(self, prompt, max_new_tokens=32, eos_id=None) -> int:

@@ -1,5 +1,5 @@
-"""Differential harness: the Pallas fused-transaction backend vs the
-jnp reference oracle, on randomized alloc/free/write/check traces.
+"""Differential harness: the fused-arena Pallas backend vs the jnp
+reference oracle, on randomized alloc/free/write/check traces.
 
 For every variant the same trace is replayed through
 ``Ouroboros(cfg, variant, backend="jnp")`` and ``backend="pallas"``
@@ -8,13 +8,22 @@ two executions must be **bit-identical** at every step:
 
   - granted offsets and failure masks (−1 lanes)
   - ``check_pattern`` integrity verdicts
-  - the full allocator state pytree (heap words, ring stores,
-    front/back counters, virtual-queue directories/chains, chunk
-    bitmaps and free counts, pool)
+  - the full arena: every word of ``mem`` (heap, pool ring, queue ring
+    or segment directory, chunk bitmaps) and of ``ctl`` (every counter)
 
-This is the safety net the ISSUE calls for: any rewrite of the hot
-path must keep the two backends in lockstep, so the kernels can evolve
-while the jnp path stays the oracle.
+Beyond lockstep equality this file pins the arena-era contracts:
+
+  - one ``pallas_call`` per whole transaction (alloc and free), for all
+    six variants, asserted on the jaxpr — the ISSUE's fusion criterion;
+  - va/vl segment grow/shrink runs *inside* that one kernel: the
+    small-chunk config below forces directory/chain growth and
+    segment reclaim mid-trace (asserted via the pool counters, which
+    only move on segment traffic for page-kind virtualized variants);
+  - ``init`` state is backend-free, so a live heap can switch backends
+    mid-stream and stay on the oracle's trajectory.
+
+``--runslow`` unlocks the long replays (more ops, more seeds, both
+configs × all six variants) that the scheduled CI job runs nightly.
 """
 import numpy as np
 import pytest
@@ -27,9 +36,22 @@ from repro.core import HeapConfig, Ouroboros, VARIANTS
 CFG = HeapConfig(total_bytes=1 << 16, chunk_bytes=1 << 11,
                  min_page_bytes=16)
 SIZES = [16, 24, 100, 256, 1000, 2048, 8192]  # 8192 > chunk → must fail
+
+# Tiny chunks (16 words, so 15/16 queue slots per segment) make the
+# virtualized queues cross a segment boundary every lane-width of
+# traffic: init fills class 0 to exactly a segment edge, so the first
+# class-0 free grows the directory/chain and a handful of allocs
+# consume a whole segment and return it to the pool (shrink) — both
+# paths of the in-kernel walk fire within a short trace.
+GROW_CFG = HeapConfig(total_bytes=1 << 16, chunk_bytes=64,
+                      min_page_bytes=16)
+GROW_SIZES = [16, 32, 64, 128]                # 128 > chunk → must fail
+
 N = 16       # fixed lane width so every transaction reuses one jit cache
 OPS = 8
 SEEDS = (0, 1)
+
+VIRT_VARIANTS = tuple(v for v in VARIANTS if "_" in v)
 
 
 def _assert_state_equal(variant, step, sj, sp):
@@ -41,19 +63,21 @@ def _assert_state_equal(variant, step, sj, sp):
             err_msg=f"{variant}: state diverged after op {step}")
 
 
-def _replay(variant, seed):
+def _replay(variant, seed, cfg=CFG, sizes_menu=SIZES, ops=OPS):
     rng = np.random.default_rng(seed)
-    oj = Ouroboros(CFG, variant, backend="jnp")
-    op = Ouroboros(CFG, variant, backend="pallas")
+    oj = Ouroboros(cfg, variant, backend="jnp")
+    op = Ouroboros(cfg, variant, backend="pallas")
     sj, sp = oj.init(), op.init()
     _assert_state_equal(variant, "init", sj, sp)
+    pool_ctr0 = np.asarray(sj.ctl)[-2:].copy()
+    pool_moved = False
 
     live = []  # (offset, size) granted and not yet freed
     tagc = 0
-    for step in range(OPS):
+    for step in range(ops):
         kind = rng.choice(["alloc", "free"]) if live else "alloc"
         if kind == "alloc":
-            sizes = jnp.asarray(rng.choice(SIZES, N), jnp.int32)
+            sizes = jnp.asarray(rng.choice(sizes_menu, N), jnp.int32)
             mask = jnp.asarray(rng.random(N) < 0.85)
             sj, offj = oj.alloc(sj, sizes, mask)
             sp, offp = op.alloc(sp, sizes, mask)
@@ -87,6 +111,9 @@ def _replay(variant, seed):
             sj = oj.free(sj, jnp.asarray(fo), jnp.asarray(fs), fm)
             sp = op.free(sp, jnp.asarray(fo), jnp.asarray(fs), fm)
         _assert_state_equal(variant, step, sj, sp)
+        pool_moved |= bool(
+            (np.asarray(sj.ctl)[-2:] != pool_ctr0).any())
+    return pool_moved
 
 
 @pytest.mark.parametrize("variant", VARIANTS)
@@ -94,6 +121,58 @@ def test_backends_bit_identical(variant):
     for seed in SEEDS:
         _replay(variant, seed)
 
+
+@pytest.mark.parametrize("variant", VIRT_VARIANTS)
+def test_backends_bit_identical_with_segment_churn(variant):
+    """Small-chunk config: the va/vl segment walk grows and shrinks
+    segments mid-trace, entirely inside the fused kernel."""
+    pool_moved = _replay(variant, 3, cfg=GROW_CFG, sizes_menu=GROW_SIZES,
+                         ops=10)
+    if variant in ("va_page", "vl_page"):
+        # For page-kind virtualized variants the pool only moves on
+        # queue-segment grow/shrink — proof the trace exercised both
+        # paths of the in-kernel walk.
+        assert pool_moved, "trace never grew/shrank a queue segment"
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_backends_bit_identical_long_traces(variant):
+    """Nightly CI sweep: longer traces, more seeds, both heap shapes."""
+    for seed in (0, 1, 2):
+        _replay(variant, seed, ops=24)
+        _replay(variant, seed + 10, cfg=GROW_CFG, sizes_menu=GROW_SIZES,
+                ops=24)
+
+
+# ---- the fusion criterion: ONE kernel per whole transaction ---------------
+
+from repro.kernels.ops import count_pallas_calls as _count_pallas_calls
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_single_pallas_call_per_txn(variant):
+    """backend="pallas": alloc and free each lower to exactly one
+    pallas_call — the entire transaction (rank, grant, ring traffic,
+    bitmap claim, va/vl segment walk) is device-fused.  The jnp oracle
+    lowers to zero."""
+    sizes = jnp.full(N, 64, jnp.int32)
+    mask = jnp.ones(N, bool)
+    offs = jnp.full(N, -1, jnp.int32)
+    for backend, want in (("pallas", 1), ("jnp", 0)):
+        o = Ouroboros(CFG, variant, backend)
+        st = o.init()
+        ja = jax.make_jaxpr(lambda s, z, m: o.alloc(s, z, m))(
+            st, sizes, mask)
+        jf = jax.make_jaxpr(lambda s, x, z, m: o.free(s, x, z, m))(
+            st, offs, sizes, mask)
+        assert _count_pallas_calls(ja) == want, (
+            f"{variant}/{backend}: alloc is not a single fused kernel")
+        assert _count_pallas_calls(jf) == want, (
+            f"{variant}/{backend}: free is not a single fused kernel")
+
+
+# ---- backend plumbing -----------------------------------------------------
 
 def test_backend_validated():
     with pytest.raises(ValueError, match="backend"):
@@ -111,3 +190,44 @@ def test_backends_share_init_state():
     st = oj.free(st, offs, sizes, mask)    # jnp txn on pallas-built state
     st2, offs2 = op.alloc(st, sizes, mask)
     assert (np.asarray(offs2) >= 0).all()
+
+
+@pytest.mark.parametrize("variant", ("page", "va_page", "vl_chunk"))
+def test_midstream_backend_switch_stays_on_oracle_trajectory(variant):
+    """Replaying a trace while hopping jnp→pallas→jnp after every op
+    lands bit-identically on the pure-jnp trajectory (the ouroboros.py
+    promise that shared init state lets a heap switch backends)."""
+    oj = Ouroboros(CFG, variant, backend="jnp")
+    op = Ouroboros(CFG, variant, backend="pallas")
+    rng = np.random.default_rng(7)
+    ref, mix = oj.init(), oj.init()  # distinct buffers: alloc donates
+    hop = [oj, op, oj, op]  # jnp→pallas→jnp→pallas…
+    tagc = 0
+    live = []
+    for step in range(6):
+        o = hop[step % len(hop)]
+        if live and rng.random() < 0.4:
+            k = min(len(live), N)
+            fo = np.full(N, -1, np.int32)
+            fs = np.zeros(N, np.int32)
+            fo[:k] = [x[0] for x in live[:k]]
+            fs[:k] = [x[1] for x in live[:k]]
+            live = live[k:]
+            fm = jnp.asarray(fo >= 0)
+            ref = oj.free(ref, jnp.asarray(fo), jnp.asarray(fs), fm)
+            mix = o.free(mix, jnp.asarray(fo), jnp.asarray(fs), fm)
+        else:
+            sizes = jnp.asarray(rng.choice(SIZES, N), jnp.int32)
+            mask = jnp.asarray(rng.random(N) < 0.85)
+            ref, offr = oj.alloc(ref, sizes, mask)
+            mix, offm = o.alloc(mix, sizes, mask)
+            np.testing.assert_array_equal(np.asarray(offr),
+                                          np.asarray(offm))
+            tags = jnp.arange(tagc, tagc + N, dtype=jnp.int32)
+            tagc += N
+            so = jnp.asarray(np.asarray(offr), jnp.int32)
+            ref = oj.write_pattern(ref, so, sizes, tags)
+            mix = o.write_pattern(mix, so, sizes, tags)
+            live.extend((int(x), int(s)) for x, s in
+                        zip(np.asarray(offr), np.asarray(sizes)) if x >= 0)
+        _assert_state_equal(variant, f"switch-{step}", ref, mix)

@@ -161,7 +161,7 @@ def test_check_pattern_failed_lanes_report_false():
     False and the write is dropped (no heap corruption)."""
     ouro = Ouroboros(CFG, "page")
     st = ouro.init()
-    heap_before = np.asarray(st.ctx.heap)
+    heap_before = np.asarray(ouro.heap(st))
     offs = jnp.asarray([-1, 256], jnp.int32)
     sizes = jnp.full(2, 64, jnp.int32)
     tags = jnp.asarray([5, 6], jnp.int32)
@@ -169,7 +169,7 @@ def test_check_pattern_failed_lanes_report_false():
     ok = np.asarray(ouro.check_pattern(st, offs, sizes, tags))
     assert list(ok) == [False, True]
     # the failed lane wrote nothing anywhere
-    heap_after = np.asarray(st.ctx.heap)
+    heap_after = np.asarray(ouro.heap(st))
     touched = np.nonzero(heap_after != heap_before)[0]
     assert touched.min() >= 256 and touched.max() < 256 + 16
 

@@ -1,0 +1,120 @@
+"""Edge cases of the static heap math: `_clz32` boundaries and the
+vectorized size→class mapping (`heap.size_to_class_device`).
+
+The device mapping is shared verbatim by both transaction backends
+(it runs *inside* the fused arena kernel), so a wrong class here would
+corrupt every variant identically — parity alone can't catch it, only
+direct boundary tests can."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.heap import HeapConfig, _clz32, size_to_class_device
+
+CFG = HeapConfig(total_bytes=1 << 16, chunk_bytes=1 << 11,
+                 min_page_bytes=16)  # classes 16 B .. 2 KiB → C = 8
+
+
+def _classes(sizes):
+    return list(np.asarray(
+        size_to_class_device(CFG, jnp.asarray(sizes, jnp.int32))))
+
+
+# ---- _clz32 ---------------------------------------------------------------
+
+def test_clz32_boundaries():
+    x = jnp.asarray([0, 1, 2, 3, 2**30, 2**31 - 1], jnp.int32)
+    got = list(np.asarray(_clz32(x)))
+    assert got == [32, 31, 30, 30, 1, 1]
+
+
+def test_clz32_matches_numpy_reference():
+    rng = np.random.default_rng(0)
+    vals = np.concatenate([
+        rng.integers(0, 2**31 - 1, 64),
+        [0, 1, 2**31 - 1] + [2**k for k in range(31)]]).astype(np.int64)
+    got = np.asarray(_clz32(jnp.asarray(vals, jnp.int32)))
+    want = [32 if v == 0 else 32 - int(v).bit_length() for v in vals]
+    np.testing.assert_array_equal(got, want)
+
+
+# ---- size_to_class_device -------------------------------------------------
+
+def test_tiny_sizes_clamp_to_smallest_class():
+    # 0 and 1 clamp to min_page (16 B) → class 0, like the host math.
+    assert _classes([0, 1, 15, 16]) == [0, 0, 0, 0]
+
+
+def test_exact_class_boundaries():
+    # 2^k is the last size of class k-log2(min); 2^k + 1 spills up.
+    sizes, want = [], []
+    for c in range(CFG.num_classes):
+        p = CFG.page_bytes(c)
+        sizes += [p - 1, p, p + 1]
+        want += [c, c, min(c + 1, CFG.num_classes)]
+    # p-1 of class 0 is 15 → clamps to class 0 (not class -1)
+    want[0] = 0
+    assert _classes(sizes) == want
+    # host math agrees on every in-range boundary
+    for s, w in zip(sizes, want):
+        if w < CFG.num_classes:
+            assert CFG.size_to_class(s) == w
+
+
+def test_oversize_maps_to_invalid_class():
+    C = CFG.num_classes
+    got = _classes([CFG.chunk_bytes + 1, CFG.chunk_bytes * 2, 2**30,
+                    2**31 - 1])
+    assert got == [C, C, C, C]
+
+
+def test_negative_sizes_are_invalid_not_small():
+    """A >2 GiB request wraps negative after the int32 cast; it must
+    fail like an over-large request, never be granted a 16 B page."""
+    C = CFG.num_classes
+    assert _classes([-1, -(2**31), -4096]) == [C, C, C]
+
+
+def test_invalid_class_lanes_fail_in_alloc():
+    from repro.core import Ouroboros
+    ouro = Ouroboros(CFG, "page")
+    st = ouro.init()
+    sizes = jnp.asarray([64, -1, CFG.chunk_bytes * 2, 64], jnp.int32)
+    st, offs = ouro.alloc(st, sizes, jnp.ones(4, bool))
+    offs = np.asarray(offs)
+    assert offs[0] >= 0 and offs[3] >= 0
+    assert offs[1] == -1 and offs[2] == -1
+
+
+# ---- arena layout <-> DESIGN.md §7 ---------------------------------------
+
+def test_design_doc_layout_tables_match_live_layout():
+    """DESIGN.md §7's example offset tables are rendered from
+    ``ArenaLayout.describe()``; re-render and require the mem lines to
+    appear verbatim so doc and layout cannot drift apart silently."""
+    import pathlib
+
+    from repro.core import arena
+    doc = (pathlib.Path(__file__).resolve().parent.parent
+           / "DESIGN.md").read_text()
+    for kind, family in (("page", "ring"), ("chunk", "vl")):
+        desc = arena.layout(CFG, kind, family).describe()
+        mem_lines = [ln for ln in desc.splitlines() if "mem[" in ln
+                     or ln.startswith("arena(")]
+        for ln in mem_lines:
+            assert ln in doc, (
+                f"DESIGN.md §7 drifted from the live layout: {ln!r}")
+
+
+def test_arena_layout_regions_are_contiguous_and_disjoint():
+    from repro.core import arena
+    for kind in ("page", "chunk"):
+        for family in ("ring", "va", "vl"):
+            lay = arena.layout(CFG, kind, family)
+            pos = 0
+            for r in lay.regions:
+                assert r.offset == pos, f"{kind}/{family}: gap at {r.name}"
+                pos = r.end
+            assert pos == lay.mem_words
+            assert lay.ctl_words == 4 * CFG.num_classes + 2

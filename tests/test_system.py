@@ -134,6 +134,30 @@ def test_engine_roundtrip(rng):
     assert eng.stats["frees"] == eng.stats["allocs"]
 
 
+def test_engine_roundtrip_pallas_alloc_backend(rng):
+    """The engine's bulk page grants/releases through the fused
+    single-kernel arena transactions (alloc_backend="pallas") behave
+    identically to the jnp oracle path: same grants, no failures, all
+    pages returned.  (Bit-level backend parity is test_alloc_txn_parity;
+    this pins the serving wiring end to end.)"""
+    from repro.serve.engine import ServingEngine
+    cfg = get_arch("qwen2-0.5b").smoke()
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(m, params, max_batch=2, max_seq=64,
+                        kv_dtype=jnp.float32, alloc_backend="pallas")
+    assert eng.stats["arena_mem_words"] > 0
+    for _ in range(3):
+        eng.submit(rng.integers(2, cfg.vocab_size,
+                                int(rng.integers(4, 20))),
+                   max_new_tokens=4)
+    done = eng.run_until_done(100)
+    assert len(done) == 3
+    assert all(len(r.out_tokens) == 4 for r in done)
+    assert eng.stats["alloc_failures"] == 0
+    assert eng.stats["frees"] == eng.stats["allocs"] > 0
+
+
 def test_engine_greedy_matches_batch_decode(rng):
     """Engine output == straight prefill+decode for the same prompt."""
     cfg = get_arch("qwen2-0.5b").smoke()
