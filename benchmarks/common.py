@@ -28,15 +28,17 @@ BENCH_HEAP = HeapConfig(total_bytes=32 << 20, chunk_bytes=8 << 10,
 
 def bench_variant(variant: str, *, n_allocs: int, size_bytes: int,
                   iters: int = ITERS, cfg: HeapConfig = BENCH_HEAP,
-                  backend: str = "jnp"):
+                  backend: str = "jnp", lowering: str = "auto"):
     """One paper-style measurement cell.  Returns dict with avg_all /
     avg_subsequent alloc+free µs and the data-integrity flag.
 
     ``backend`` selects the transaction implementation (jnp reference
     vs fused Pallas kernels) so every figure cell can report the two
     side by side — on CPU the Pallas path runs in interpret mode, so
-    its timings are only meaningful on a TPU backend."""
-    ouro = Ouroboros(cfg, variant, backend)
+    its timings are only meaningful on a TPU backend.  ``lowering``
+    picks the Pallas kernel shape (whole-arena refs vs region-blocked;
+    kernels/ops.resolve_lowering)."""
+    ouro = Ouroboros(cfg, variant, backend, lowering)
     state = ouro.init()
     jax.block_until_ready(state)
     sizes = jnp.full(n_allocs, size_bytes, jnp.int32)
@@ -61,9 +63,12 @@ def bench_variant(variant: str, *, n_allocs: int, size_bytes: int,
         jax.block_until_ready(state)
         free_t.append(time.perf_counter() - t0)
 
+    from repro.kernels.ops import resolve_lowering
     us = lambda ts: 1e6 * float(np.mean(ts))
     return {
         "variant": variant, "backend": backend,
+        "lowering": (resolve_lowering(lowering) if backend == "pallas"
+                     else "none"),
         "n": n_allocs, "size": size_bytes,
         "alloc_us_all": us(alloc_t),
         "alloc_us_subsequent": us(alloc_t[1:]),
@@ -80,7 +85,7 @@ THREAD_SWEEP_CHUNK = (32, 128, 512, 1024, 2048)    # chunk walk is O(N/ppc)
 
 
 def figure_rows(variant: str, quick: bool = False,
-                backend: str = "jnp"):
+                backend: str = "jnp", lowering: str = "auto"):
     """The two sweeps of one paper figure (size @1024 allocs; threads
     @1000 B), as the paper's figs. 1-6 do per allocator."""
     sizes = SIZE_SWEEP[::3] if quick else SIZE_SWEEP
@@ -91,23 +96,25 @@ def figure_rows(variant: str, quick: bool = False,
     for s in sizes:
         rows.append(bench_variant(variant, n_allocs=1024 if not quick
                                   else 256, size_bytes=s,
-                                  backend=backend))
+                                  backend=backend, lowering=lowering))
     for n in threads:
         rows.append(bench_variant(variant, n_allocs=n, size_bytes=1000,
-                                  backend=backend))
+                                  backend=backend, lowering=lowering))
     return rows
 
 
-def pallas_calls_per_txn(variant: str, backend: str = "pallas"):
+def pallas_calls_per_txn(variant: str, backend: str = "pallas",
+                         lowering: str = "auto"):
     """(alloc, free) pallas_call launch counts for one bulk transaction,
     read off the jaxpr — the proof of single-kernel fusion the arena
-    refactor claims (1/1 for "pallas", 0/0 for "jnp").  Uses a small
-    heap: the count is layout-independent and tracing stays cheap."""
+    refactor claims (1/1 for "pallas" under BOTH lowerings, 0/0 for
+    "jnp").  Uses a small heap: the count is layout-independent and
+    tracing stays cheap."""
     from repro.kernels.ops import count_pallas_calls as count
 
     cfg = HeapConfig(total_bytes=1 << 16, chunk_bytes=1 << 11,
                      min_page_bytes=16)
-    ouro = Ouroboros(cfg, variant, backend)
+    ouro = Ouroboros(cfg, variant, backend, lowering)
     st = ouro.init()
     sizes = jnp.full(16, 64, jnp.int32)
     mask = jnp.ones(16, bool)
@@ -119,7 +126,8 @@ def pallas_calls_per_txn(variant: str, backend: str = "pallas"):
     return count(ja), count(jf)
 
 
-def alloc_comparison_cell(variant: str, *, quick: bool = False):
+def alloc_comparison_cell(variant: str, *, quick: bool = False,
+                          lowering: str = "auto"):
     """One jnp-vs-pallas cell per variant for BENCH_alloc.json — the
     perf-trajectory artifact future PRs diff against."""
     n = 128 if quick else 512
@@ -129,8 +137,9 @@ def alloc_comparison_cell(variant: str, *, quick: bool = False):
     for backend in ("jnp", "pallas"):
         r = bench_variant(variant, n_allocs=n, size_bytes=256,
                           iters=4 if quick else ITERS, cfg=cfg,
-                          backend=backend)
+                          backend=backend, lowering=lowering)
         out[backend] = {
+            "lowering": r["lowering"],
             "alloc_us_all": r["alloc_us_all"],
             "alloc_us_subsequent": r["alloc_us_subsequent"],
             "free_us_all": r["free_us_all"],

@@ -7,5 +7,7 @@ from benchmarks.common import figure_rows
 VARIANT = "vl_chunk"
 
 
-def run(quick: bool = False, backend: str = "jnp"):
-    return figure_rows(VARIANT, quick=quick, backend=backend)
+def run(quick: bool = False, backend: str = "jnp",
+        lowering: str = "auto"):
+    return figure_rows(VARIANT, quick=quick, backend=backend,
+                       lowering=lowering)

@@ -14,8 +14,14 @@ single-kernel fusion — so ``BENCH_alloc.json`` accumulates a perf
 trajectory across PRs instead of overwriting it (records made before
 the append format are migrated in place as the first run).
 
+Each run record also carries ``lowering: blocked|whole`` — which Pallas
+kernel shape the cells ran (``--lowering``; auto = whole on CPU
+interpret, blocked on TPU) — so perf rows stay comparable across the
+two compiled stories.
+
     PYTHONPATH=src python -m benchmarks.run [--quick] [--fig fig1_page]
-        [--backend jnp|pallas|both] [--alloc-json BENCH_alloc.json]
+        [--backend jnp|pallas|both] [--lowering auto|whole|blocked]
+        [--alloc-json BENCH_alloc.json]
 """
 from __future__ import annotations
 
@@ -38,6 +44,11 @@ def main(argv=None) -> None:
     ap.add_argument("--backend", choices=("jnp", "pallas", "both"),
                     default="jnp",
                     help="allocator transaction backend per cell")
+    ap.add_argument("--lowering", choices=("auto", "whole", "blocked"),
+                    default="auto",
+                    help="Pallas kernel lowering: whole-arena refs vs "
+                         "the region-blocked compiled lowering "
+                         "(DESIGN.md §8); auto picks per platform")
     ap.add_argument("--alloc-json", default=None, metavar="PATH",
                     help="also write per-variant jnp-vs-pallas "
                          "avg_all/avg_subsequent to PATH")
@@ -50,9 +61,10 @@ def main(argv=None) -> None:
     for fig in figs:
         mod = importlib.import_module(f"benchmarks.{fig}")
         for backend in backends:
-            for row in mod.run(quick=args.quick, backend=backend):
+            for row in mod.run(quick=args.quick, backend=backend,
+                               lowering=args.lowering):
                 name = (f"{fig}/{row['variant']}/{row['backend']}"
-                        f"/n{row['n']}/s{row['size']}")
+                        f"/{row['lowering']}/n{row['n']}/s{row['size']}")
                 derived = (f"alloc_all={row['alloc_us_all']:.0f}us "
                            f"alloc_sub={row['alloc_us_subsequent']:.0f}us "
                            f"free_sub={row['free_us_subsequent']:.0f}us "
@@ -67,21 +79,28 @@ def main(argv=None) -> None:
                                        pallas_calls_per_txn)
         from repro.core import VARIANTS
 
+        from repro.kernels.ops import resolve_lowering
+
+        lowering = resolve_lowering(args.lowering)
         launches = {}
         for v in VARIANTS:
-            a, f = pallas_calls_per_txn(v, "pallas")
+            a, f = pallas_calls_per_txn(v, "pallas", args.lowering)
             launches[v] = {"alloc": a, "free": f}
-            print(f"launches_per_txn,{v}/pallas,alloc={a} free={f}",
-                  flush=True)
+            print(f"launches_per_txn,{v}/pallas/{lowering},"
+                  f"alloc={a} free={f}", flush=True)
 
         # pallas timings on a non-TPU platform are interpret-mode and
-        # only the jnp column is a perf signal there; record which.
+        # only the jnp column is a perf signal there; record which —
+        # and which kernel lowering (whole|blocked) the pallas cells
+        # actually ran, so the trajectory stays comparable.
         record = {
             "platform": jax.default_backend(),
             "git_sha": _git_sha(),
             "quick": bool(args.quick),
+            "lowering": lowering,
             "launches_per_txn": launches,
-            "variants": {v: alloc_comparison_cell(v, quick=args.quick)
+            "variants": {v: alloc_comparison_cell(v, quick=args.quick,
+                                                  lowering=args.lowering)
                          for v in VARIANTS},
         }
         runs = _load_runs(args.alloc_json)

@@ -50,10 +50,27 @@ class Arena(NamedTuple):
 
 @dataclasses.dataclass(frozen=True)
 class Region:
-    """One named window of ``mem``: ``[offset, offset + words)``."""
+    """One named window of ``mem``: ``[offset, offset + words)``.
+
+    ``blocking`` records how the region-blocked compiled lowering
+    (kernels/alloc_txn_blocked.py) stages this region per grid step:
+
+    - ``"row"``       one (1, shape[1]) row per size-class grid step,
+                      selected by the BlockSpec index map;
+    - ``"resident"``  the whole region as one VMEM block with a
+                      constant index map (fetched once, revisited —
+                      Pallas keeps an unchanged block on-chip);
+    - ``"hbm"``       the region stays in HBM (``memory_space=ANY``);
+                      the kernel DMAs only the touched rows/words
+                      through VMEM scratch (heap segments, bitmap rows);
+    - ``"untouched"`` the transaction can never write it, so the
+                      blocked lowering does not even pass it to the
+                      kernel.
+    """
     name: str
     offset: int
     shape: Tuple[int, ...]
+    blocking: str = "resident"
 
     @property
     def words(self) -> int:
@@ -62,6 +79,16 @@ class Region:
     @property
     def end(self) -> int:
         return self.offset + self.words
+
+    @property
+    def block_shape(self) -> Optional[Tuple[int, ...]]:
+        """VMEM block staged per grid step by the blocked lowering
+        (None when the region never enters VMEM wholesale)."""
+        if self.blocking == "row":
+            return (1,) + self.shape[1:]
+        if self.blocking == "resident":
+            return self.shape
+        return None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -119,13 +146,21 @@ class ArenaLayout:
     def off_pool_back(self) -> int:
         return 4 * self.num_classes + 1
 
-    def describe(self) -> str:
+    def describe(self, blocks: bool = False) -> str:
         """Human-readable offset table (DESIGN.md §7 is rendered from
-        this, and a test pins the two together)."""
+        this, and a test pins the two together).  ``blocks=True``
+        appends each region's blocked-lowering treatment (DESIGN.md §8;
+        tests/test_arena_golden.py pins both renderings)."""
         lines = [f"arena(kind={self.kind}, family={self.family}): "
                  f"mem {self.mem_words} words, ctl {self.ctl_words} words"]
         for r in self.regions:
-            lines.append(f"  mem[{r.offset}:{r.end}]  {r.name} {r.shape}")
+            tail = ""
+            if blocks:
+                bs = ("-" if r.block_shape is None
+                      else "x".join(map(str, r.block_shape)))
+                tail = f"  [{r.blocking}: block {bs}]"
+            lines.append(f"  mem[{r.offset}:{r.end}]  {r.name} {r.shape}"
+                         f"{tail}")
         C = self.num_classes
         for nm, off, w in (("front", self.off_front, C),
                            ("back", self.off_back, C),
@@ -157,20 +192,27 @@ def layout(cfg: HeapConfig, kind: str, family: str) -> ArenaLayout:
     cap = queue_capacity(cfg, kind)
     max_segs = cap // cfg.slots_per_segment(family) + 2
 
-    regions = [Region("heap", 0, (cfg.total_words,))]
+    # Per-region treatment under the blocked compiled lowering (see
+    # Region.blocking and DESIGN.md §8).  Transactions never write the
+    # heap for ring-family variants (segment traffic is what touches
+    # it), and never write the pool for the plain page variant.
+    heap_blk = "untouched" if family == "ring" else "hbm"
+    pool_blk = ("untouched" if (family == "ring" and kind == "page")
+                else "resident")
+    regions = [Region("heap", 0, (cfg.total_words,), heap_blk)]
 
-    def add(name, shape):
-        regions.append(Region(name, regions[-1].end, shape))
+    def add(name, shape, blocking):
+        regions.append(Region(name, regions[-1].end, shape, blocking))
 
-    add("pool_store", (1, cfg.num_chunks))
+    add("pool_store", (1, cfg.num_chunks), pool_blk)
     if family == "ring":
-        add("queue_store", (C, cap))
+        add("queue_store", (C, cap), "row")
     else:
-        add("directory", (C, max_segs))
+        add("directory", (C, max_segs), "row")
     if kind == "chunk":
-        add("bitmap", (cfg.num_chunks, cfg.bitmap_words_per_chunk))
-        add("free_count", (cfg.num_chunks,))
-        add("chunk_class", (cfg.num_chunks,))
+        add("bitmap", (cfg.num_chunks, cfg.bitmap_words_per_chunk), "hbm")
+        add("free_count", (cfg.num_chunks,), "resident")
+        add("chunk_class", (cfg.num_chunks,), "resident")
 
     return ArenaLayout(cfg=cfg, kind=kind, family=family,
                        regions=tuple(regions), num_classes=C,
@@ -250,3 +292,27 @@ def with_heap(lay: ArenaLayout, arena: Arena, heap) -> Arena:
     """Arena with the heap region replaced (offset 0, so one update)."""
     return arena._replace(
         mem=jax.lax.dynamic_update_slice(arena.mem, heap, (0,)))
+
+
+# --------------------------------------------------------------------------
+# region split / join: mem <-> one flat array per region
+# --------------------------------------------------------------------------
+#
+# The blocked lowering never hands the kernel the whole ``mem`` image as
+# one ref; the wrapper splits it into its regions (static slices — XLA
+# fuses them away) so each region can ride its own BlockSpec, and joins
+# the touched regions back afterwards.  Regions the transaction cannot
+# write (Region.blocking == "untouched") bypass the kernel entirely and
+# are reused verbatim in the join.
+
+def split(lay: ArenaLayout, mem):
+    """``mem`` as a dict of flat per-region arrays (zero-cost views)."""
+    return {r.name: jax.lax.slice(mem, (r.offset,), (r.end,))
+            for r in lay.regions}
+
+
+def join(lay: ArenaLayout, parts) -> Any:
+    """Inverse of :func:`split`: concatenate region arrays (flattened,
+    in layout order) back into one ``mem`` image."""
+    return jnp.concatenate([parts[r.name].reshape(-1)
+                            for r in lay.regions])

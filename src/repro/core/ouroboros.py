@@ -43,6 +43,7 @@ from repro.core.heap import HeapConfig
 
 VARIANTS = ("page", "chunk", "va_page", "vl_page", "va_chunk", "vl_chunk")
 BACKENDS = ("jnp", "pallas")
+LOWERINGS = ("auto", "whole", "blocked")
 
 
 def _split(variant: str):
@@ -56,17 +57,27 @@ def _split(variant: str):
 
 @dataclasses.dataclass(frozen=True)
 class Ouroboros:
-    """Facade binding a HeapConfig to one of the six variants and a
-    transaction backend (jnp reference path or fused Pallas kernels)."""
+    """Facade binding a HeapConfig to one of the six variants, a
+    transaction backend (jnp reference path or fused Pallas kernels),
+    and — for the Pallas backend — a kernel ``lowering``: ``"whole"``
+    (full-arena refs), ``"blocked"`` (the region-blocked compiled
+    lowering, DESIGN.md §8), or ``"auto"`` (kernels/ops picks per
+    platform / REPRO_ALLOC_LOWERING).  Both lowerings are bit-identical
+    to the jnp oracle and to each other (tests/test_alloc_txn_parity)."""
     cfg: HeapConfig
     variant: str
     backend: str = "jnp"
+    lowering: str = "auto"
 
     def __post_init__(self):
         _split(self.variant)
         if self.backend not in BACKENDS:
             raise ValueError(
                 f"unknown backend {self.backend!r}; pick from {BACKENDS}")
+        if self.lowering not in LOWERINGS:
+            raise ValueError(
+                f"unknown lowering {self.lowering!r}; pick from "
+                f"{LOWERINGS}")
 
     @property
     def kind(self) -> str:
@@ -87,13 +98,14 @@ class Ouroboros:
     @functools.partial(jax.jit, static_argnums=0, donate_argnums=1)
     def alloc(self, state, sizes_bytes, mask):
         return transactions.alloc(self.cfg, self.kind, self.family,
-                                  state, sizes_bytes, mask, self.backend)
+                                  state, sizes_bytes, mask, self.backend,
+                                  self.lowering)
 
     @functools.partial(jax.jit, static_argnums=0, donate_argnums=1)
     def free(self, state, offsets_words, sizes_bytes, mask):
         return transactions.free(self.cfg, self.kind, self.family, state,
                                  offsets_words, sizes_bytes, mask,
-                                 self.backend)
+                                 self.backend, self.lowering)
 
     def compact(self, state):
         return transactions.compact(self.cfg, self.kind, self.family,

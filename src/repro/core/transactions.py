@@ -17,14 +17,25 @@ Two execution paths share one body:
 
 ``alloc``/``free``   the public dispatcher.  ``backend="jnp"`` calls the
              math directly (the oracle); ``backend="pallas"`` hands the
-             *same* math to ``kernels/alloc_txn.arena_alloc_txn`` /
-             ``arena_free_txn``, which execute the entire transaction —
+             transaction to ONE ``pallas_call`` executing it whole —
              masked rank, inventory grant, ring pop/push, chunk-bitmap
              claim, and the va/vl segment walk with its grow/shrink
-             against the chunk pool — inside ONE ``pallas_call``.
-             Sharing the body makes bit-exact parity structural, and
-             tests/test_alloc_txn_parity.py enforces it word for word;
-             tests also assert the one-kernel property on the jaxpr.
+             against the chunk pool — under the ``lowering`` the
+             dispatcher stitches in (kernels/ops.resolve_lowering):
+
+             ``whole``    the kernel body IS this module's math over
+                          full ``mem``/``ctl`` refs (kernels/alloc_txn)
+                          — parity with the oracle is structural;
+             ``blocked``  the region-blocked compiled lowering
+                          (kernels/alloc_txn_blocked, DESIGN.md §8):
+                          the same math split into per-region,
+                          per-class bodies driven by the ArenaLayout
+                          region table — parity is enforced word for
+                          word by the three-way differential matrix.
+
+             tests/test_alloc_txn_parity.py holds all implementations
+             bit-identical and asserts the one-kernel property on the
+             jaxpr for both lowerings.
 """
 from __future__ import annotations
 
@@ -74,16 +85,33 @@ def free_math(cfg: HeapConfig, kind: str, family: str, mem, ctl,
 
 # ---- public dispatcher ----------------------------------------------------
 
+BACKENDS = ("jnp", "pallas")
+
+
+def _check_backend(backend: str) -> None:
+    # Fail loudly here too, not only in the Ouroboros facade: a typo
+    # like "palas" must never silently fall through to the jnp branch
+    # for callers that reach the dispatcher directly.
+    if backend not in BACKENDS:
+        raise ValueError(
+            f"unknown backend {backend!r}; pick from {BACKENDS}")
+
+
 def alloc(cfg: HeapConfig, kind: str, family: str, state: arena.Arena,
-          sizes_bytes, mask, backend: str = "jnp"):
+          sizes_bytes, mask, backend: str = "jnp",
+          lowering: str = "auto"):
     """One bulk allocation transaction.  Returns (arena', word_offsets);
     offset −1 marks a failed lane (over-large size / exhausted
-    inventory), matching the GPU original's nullptr."""
+    inventory), matching the GPU original's nullptr.  ``lowering``
+    picks the Pallas kernel shape (whole-arena refs vs the
+    region-blocked compiled lowering — kernels/ops.resolve_lowering)."""
+    _check_backend(backend)
     if backend == "pallas":
         from repro.kernels import ops as kops
         mem, ctl, offs = kops.arena_alloc_txn(cfg, kind, family,
                                               state.mem, state.ctl,
-                                              sizes_bytes, mask)
+                                              sizes_bytes, mask,
+                                              lowering=lowering)
     else:
         mem, ctl, offs = alloc_math(cfg, kind, family, state.mem,
                                     state.ctl, sizes_bytes, mask)
@@ -91,12 +119,15 @@ def alloc(cfg: HeapConfig, kind: str, family: str, state: arena.Arena,
 
 
 def free(cfg: HeapConfig, kind: str, family: str, state: arena.Arena,
-         offsets_words, sizes_bytes, mask, backend: str = "jnp"):
+         offsets_words, sizes_bytes, mask, backend: str = "jnp",
+         lowering: str = "auto"):
+    _check_backend(backend)
     if backend == "pallas":
         from repro.kernels import ops as kops
         mem, ctl = kops.arena_free_txn(cfg, kind, family, state.mem,
                                        state.ctl, offsets_words,
-                                       sizes_bytes, mask)
+                                       sizes_bytes, mask,
+                                       lowering=lowering)
     else:
         mem, ctl = free_math(cfg, kind, family, state.mem, state.ctl,
                              offsets_words, sizes_bytes, mask)

@@ -1,0 +1,908 @@
+"""Region-blocked compiled lowering for the fused arena transactions.
+
+``kernels/alloc_txn.arena_*_txn`` (the ``whole`` lowering) hands the
+kernel the entire ``mem`` word image as one ref — correct, and ideal
+for interpret mode, but it only lowers to a real compiled TPU kernel
+while the whole arena fits VMEM.  This module is the serving-scale
+story: the *same* transactions as ONE ``pallas_call`` whose refs are
+driven by the :class:`~repro.core.arena.ArenaLayout` region table
+(DESIGN.md §8):
+
+- the grid iterates the **size classes**; step ``c`` stages only class
+  ``c``'s queue-ring row (or segment-directory row) through VMEM via a
+  ``BlockSpec`` index map — never the whole queue region;
+- the **control block rides as scalar prefetch** (its counters feed
+  loop bounds and DMA addresses) and is accumulated across grid steps
+  in a VMEM-resident output block;
+- small metadata regions (chunk pool ring, free counts, chunk→class
+  bindings) are **VMEM-resident** blocks with constant index maps —
+  fetched once, revisited in place;
+- the **heap** and the **chunk bitmaps** never enter VMEM wholesale:
+  they stay in HBM (``memory_space=ANY``) and the kernel reads/writes
+  only the touched words — segment slots, next pointers, one bitmap
+  row per claimed chunk — through dynamic loads/stores;
+- regions a transaction cannot write (``Region.blocking ==
+  "untouched"``) bypass the kernel entirely.
+
+The transaction math is the per-class / per-region decomposition of
+``core/transactions.alloc_math``/``free_math``: every body below
+mirrors one oracle path (``page_alloc``/``chunk_alloc`` over
+``queues``) at row/scalar granularity, and the differential harness
+(tests/test_alloc_txn_parity.py) holds all three implementations —
+jnp oracle, whole lowering, blocked lowering — bit-identical on
+randomized traces, word for word across the arena.
+
+Predication convention: Pallas has no masked scatter, so conditional
+single-word effects are read-modify-writes at a safe address —
+``addr = where(cond, addr, 0)`` then ``store(where(cond, new, old))``
+— which is exactly a no-op when ``cond`` is false.  Grid steps execute
+sequentially, so read-after-write across steps (pool counters, pool
+ring words, heap pointers) is well-defined; the cross-class orders
+below (class-major pool pops/pushes) replicate the oracle's flattened
+scatter orders.
+
+Mosaic portability note: every HBM(ANY)-ref access goes through the
+``_ld``/``_st``/``_vec_ld``/``_vec_st_if`` vocabulary below, which
+interpret mode executes as direct dynamic loads/stores.  A compiled
+Mosaic build that insists on explicit DMA for ANY-space refs needs
+exactly these four helpers rewritten over ``pltpu.make_async_copy``
+scratch staging — the kernel bodies never touch an HBM ref directly,
+so that swap is local and the word-level access pattern (the §8
+contract) is already the DMA shape.  Validating the blocked lowering
+on real TPU silicon is the ROADMAP's named next step; everything
+CI-visible runs it in interpret mode, which pins the semantics the
+compiled build must reproduce.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import arena
+from repro.core.heap import size_to_class_device
+from repro.kernels.alloc_txn import _iota, _member_rank
+
+NULL = -1
+
+
+# --------------------------------------------------------------------------
+# scalar / row staging helpers (the DMA vocabulary of the blocked kernels)
+# --------------------------------------------------------------------------
+
+def _ld(ref, i):
+    """Dynamic scalar load from a flat ref."""
+    return pl.load(ref, (pl.ds(i, 1),))[0]
+
+
+def _st(ref, i, v):
+    """Dynamic scalar store to a flat ref."""
+    pl.store(ref, (pl.ds(i, 1),),
+             jnp.reshape(v, (1,)).astype(ref.dtype))
+
+
+def _ld_if(ref, i, cond, fill=NULL):
+    """Predicated scalar load: ``ref[i] if cond else fill`` (reads a
+    safe address when masked, mirroring the oracle's fill-gather)."""
+    v = pl.load(ref, (pl.ds(jnp.where(cond, i, 0), 1),))[0]
+    return jnp.where(cond, v, fill)
+
+
+def _st_if(ref, i, v, cond):
+    """Predicated scalar store as a safe-address read-modify-write
+    (the in-kernel form of the oracle's ``.set(..., mode="drop")``)."""
+    a = jnp.where(cond, i, 0)
+    old = pl.load(ref, (pl.ds(a, 1),))
+    pl.store(ref, (pl.ds(a, 1),),
+             jnp.where(cond, jnp.reshape(v, (1,)).astype(old.dtype), old))
+
+
+def _row_ld(ref, j):
+    """Dynamic scalar load from a (1, w) row block."""
+    return pl.load(ref, (pl.ds(0, 1), pl.ds(j, 1)))[0, 0]
+
+
+def _row_st_if(ref, j, v, cond):
+    a = jnp.where(cond, j, 0)
+    old = pl.load(ref, (pl.ds(0, 1), pl.ds(a, 1)))
+    pl.store(ref, (pl.ds(0, 1), pl.ds(a, 1)),
+             jnp.where(cond, jnp.reshape(v, (1, 1)).astype(old.dtype),
+                       old))
+
+
+def _vec_ld(ref, start, length):
+    """Dynamic row load (``length`` static) from a flat HBM ref."""
+    return pl.load(ref, (pl.ds(start, length),))
+
+
+def _vec_st_if(ref, start, vals, cond):
+    """Predicated row store to a flat HBM ref (safe-address RMW)."""
+    a = jnp.where(cond, start, 0)
+    old = pl.load(ref, (pl.ds(a, vals.shape[0]),))
+    pl.store(ref, (pl.ds(a, vals.shape[0]),),
+             jnp.where(cond, vals.astype(old.dtype), old))
+
+
+def _take(vec, i):
+    """Scalar ``vec[i]`` for a traced index into an in-register vector."""
+    return jax.lax.dynamic_index_in_dim(vec, i, keepdims=False)
+
+
+def _gather_small(vec, idx):
+    """Per-lane gather from a small in-register vector via one-hot
+    (compiled-TPU-friendly: no dynamic gather), OOB lanes read 0."""
+    n, K = idx.shape[0], vec.shape[0]
+    oh = idx[:, None] == jax.lax.broadcasted_iota(jnp.int32, (n, K), 1)
+    return jnp.sum(jnp.where(oh, vec[None, :], 0), axis=1)
+
+
+def _lane_prep(cfg, sizes, valid_i32, offsets=None):
+    """The dispatcher's lane prep: class ids and the validity mask
+    (``page_alloc``/``chunk_alloc`` preamble, bit for bit)."""
+    C = cfg.num_classes
+    cls = size_to_class_device(cfg, sizes)
+    valid = (valid_i32 != 0) & (cls < C)
+    if offsets is not None:
+        valid = valid & (offsets >= 0)
+    return cls, valid
+
+
+# --------------------------------------------------------------------------
+# chunk-pool ring: scalar pop/push against the VMEM-resident pool row
+# --------------------------------------------------------------------------
+
+def _pool_pop1(octl, pool_ref, lay, cond):
+    """One predicated pool pop (``queues.pool_dequeue`` semantics: the
+    slot is read at the wrapped front, masked lanes yield NULL, the
+    counter advances only for active lanes)."""
+    nc = pool_ref.shape[0]
+    pf = _ld(octl, lay.off_pool_front)
+    v = _ld_if(pool_ref, pf % nc, cond, NULL)
+    _st(octl, lay.off_pool_front, pf + jnp.where(cond, 1, 0))
+    return v
+
+
+def _pool_push1(octl, pool_ref, lay, v, cond):
+    """One predicated pool push (``queues.pool_enqueue`` semantics)."""
+    nc = pool_ref.shape[0]
+    pb = _ld(octl, lay.off_pool_back)
+    _st_if(pool_ref, pb % nc, v, cond)
+    _st(octl, lay.off_pool_back, pb + jnp.where(cond, 1, 0))
+
+
+# --------------------------------------------------------------------------
+# segment grow: the one canonical protocol per virtualized family
+# --------------------------------------------------------------------------
+
+def _va_grow(octl, pool_ref, dir_ref, lay, spc, back, cnt, m):
+    """Append directory segments so slots [back, back+cnt) plus the
+    next insertion point are all backed (``queues._grow_counts``):
+    pool pops in ascending-j order, directory-row writes after the
+    current back segment."""
+    n_new = (back + cnt) // spc - back // spc
+    seg_back = back // spc
+    for j in range(m):
+        active = j < n_new
+        chk = _pool_pop1(octl, pool_ref, lay, active)
+        _row_st_if(dir_ref, (seg_back + 1 + j) % lay.max_segs, chk,
+                   active)
+
+
+def _vl_grow(octl, pool_ref, heap_ref, lay, spc, wpc, W, tail, back,
+             cnt, m):
+    """Pop, terminate, and chain new tail segments, in the oracle's
+    scatter order (all terminators, then links in j order; the last
+    new chunk keeps its NULL terminator).  Returns ``(new_chunks,
+    tail')`` — the value-write phase selects segments from
+    ``[tail] + new_chunks``."""
+    n_new = (back + cnt) // spc - back // spc
+    new_chunks = [_pool_pop1(octl, pool_ref, lay, j < n_new)
+                  for j in range(m)]
+    for j in range(m):
+        w = new_chunks[j] * wpc
+        _st_if(heap_ref, w, NULL, (j < n_new) & (w >= 0) & (w < W))
+    for j in range(m):
+        prev = tail if j == 0 else new_chunks[j - 1]
+        w = prev * wpc
+        _st_if(heap_ref, w, new_chunks[j],
+               (j < n_new) & (w >= 0) & (w < W))
+    last = jnp.maximum(n_new - 1, 0)
+    cand = _take(jnp.stack(new_chunks), last)
+    return new_chunks, jnp.where(n_new > 0, cand, tail)
+
+
+# --------------------------------------------------------------------------
+# page-kind bodies: one vectorized transaction slice per size class
+# --------------------------------------------------------------------------
+#
+# Each body is the class-c slice of the corresponding oracle bulk
+# transaction.  `E` maps region name -> the ref the body must operate
+# on (the output ref when the region is written, else the input ref);
+# `octl` is the VMEM ctl accumulator initialized from the scalar-
+# prefetched control block at step 0.
+
+def _page_ring_alloc(cfg, lay, c, sizes, valid_i32, E, octl, offs_ref):
+    """Class-c slice of page_alloc.alloc over the ring family: masked
+    rank, inventory grant, wrapped ring-window pop (the ring row is the
+    staged VMEM block), one front advance."""
+    cls, valid = _lane_prep(cfg, sizes, valid_i32)
+    n = cls.shape[0]
+    row = E["queue_store"][0, :]
+    cap = row.shape[0]
+    m = min(n, cap)
+
+    member, rank, _ = _member_rank(cls, valid, c)
+    front = _ld(octl, lay.off_front + c)
+    back = _ld(octl, lay.off_back + c)
+    grant = member & (rank < back - front)
+    cnt = jnp.sum(grant.astype(jnp.int32))
+
+    start = front % cap
+    padded = jnp.concatenate([row, row[:m]])
+    win = jax.lax.dynamic_slice(padded, (start,), (m,))
+    j = jax.lax.broadcasted_iota(jnp.int32, (n, m), 1)
+    sel = grant[:, None] & (j == (rank % m)[:, None])
+    gathered = jnp.sum(jnp.where(sel, win[None, :], 0), axis=1)
+
+    offs_ref[...] = jnp.where(grant, gathered, offs_ref[...])
+    _st(octl, lay.off_front + c, front + cnt)
+
+
+def _page_ring_free(cfg, lay, c, offsets, sizes, valid_i32, E, octl):
+    """Class-c slice of page_alloc.free over the ring family: rank,
+    rank->slot one-hot scatter, wrapped window write-back on the staged
+    ring row, one back advance."""
+    cls, valid = _lane_prep(cfg, sizes, valid_i32, offsets)
+    n = cls.shape[0]
+    qrow = E["queue_store"]
+    cap = qrow.shape[1]
+    m = min(n, cap)
+    row = qrow[0, :]
+
+    member, rank, cnt = _member_rank(cls, valid, c)
+    back = _ld(octl, lay.off_back + c)
+
+    j2 = jax.lax.broadcasted_iota(jnp.int32, (n, m), 1)
+    sel = member[:, None] & (j2 == (rank % m)[:, None])
+    w = jnp.sum(jnp.where(sel, offsets[:, None], 0), axis=0)
+
+    start = back % cap
+    padded = jnp.concatenate([row, row[:m]])
+    cur = jax.lax.dynamic_slice(padded, (start,), (m,))
+    jm = _iota(m)
+    padded = jax.lax.dynamic_update_slice(
+        padded, jnp.where(jm < cnt, w, cur), (start,))
+    over = start + cnt - cap
+    head = jnp.where(jm < over, padded[cap:cap + m], padded[:m])
+    qrow[0, :] = jnp.concatenate([head, padded[m:cap]])
+    _st(octl, lay.off_back + c, back + cnt)
+
+
+def _page_va_alloc(cfg, lay, c, sizes, valid_i32, E, octl, offs_ref):
+    """Class-c slice of page_alloc.alloc over the va family: grant,
+    per-lane gather through the directory row into heap segment slots,
+    then segment shrink (fully consumed segments -> pool)."""
+    cls, valid = _lane_prep(cfg, sizes, valid_i32)
+    n = cls.shape[0]
+    spc = cfg.slots_per_segment("va")
+    wpc = cfg.words_per_chunk
+    W = cfg.total_words
+    max_segs = lay.max_segs
+    m = n // spc + 1
+
+    member, rank, _ = _member_rank(cls, valid, c)
+    front = _ld(octl, lay.off_front + c)
+    back = _ld(octl, lay.off_back + c)
+    grant = member & (rank < back - front)
+    cnt = jnp.sum(grant.astype(jnp.int32))
+    grant_i = grant.astype(jnp.int32)
+
+    dir_ref = E["directory"]
+    heap_ref = E["heap"]
+
+    def lane(i, _):
+        g = _take(grant_i, i) != 0
+        v = front + _take(rank, i)
+        seg = _row_ld(dir_ref, (v // spc) % max_segs)
+        word = seg * wpc + v % spc
+        ok = g & (word >= 0) & (word < W)
+        val = _ld_if(heap_ref, word, ok, NULL)
+        _st(offs_ref, i, jnp.where(g, val, _ld(offs_ref, i)))
+        return 0
+
+    jax.lax.fori_loop(0, n, lane, 0)
+
+    n_free = (front + cnt) // spc - front // spc
+    seg_front = front // spc
+    for j in range(m):
+        freed = _row_ld(dir_ref, (seg_front + j) % max_segs)
+        _pool_push1(octl, E["pool_store"], lay, freed, j < n_free)
+    _st(octl, lay.off_front + c, front + cnt)
+
+
+def _page_va_free(cfg, lay, c, offsets, sizes, valid_i32, E, octl):
+    """Class-c slice of page_alloc.free over the va family: segment
+    grow (pool pops -> directory row), then per-lane value writes into
+    heap segment slots through the updated directory."""
+    cls, valid = _lane_prep(cfg, sizes, valid_i32, offsets)
+    n = cls.shape[0]
+    spc = cfg.slots_per_segment("va")
+    wpc = cfg.words_per_chunk
+    W = cfg.total_words
+    max_segs = lay.max_segs
+    m = n // spc + 1
+
+    member, rank, cnt = _member_rank(cls, valid, c)
+    back = _ld(octl, lay.off_back + c)
+    member_i = member.astype(jnp.int32)
+
+    dir_ref = E["directory"]
+    heap_ref = E["heap"]
+
+    _va_grow(octl, E["pool_store"], dir_ref, lay, spc, back, cnt, m)
+
+    def lane(i, _):
+        g = _take(member_i, i) != 0
+        v = back + _take(rank, i)
+        seg = _row_ld(dir_ref, (v // spc) % max_segs)
+        word = seg * wpc + v % spc
+        _st_if(heap_ref, word, _take(offsets, i),
+               g & (word >= 0) & (word < W))
+        return 0
+
+    jax.lax.fori_loop(0, n, lane, 0)
+    _st(octl, lay.off_back + c, back + cnt)
+
+
+def _page_vl_alloc(cfg, lay, c, sizes, valid_i32, E, octl, offs_ref):
+    """Class-c slice of page_alloc.alloc over the vl family: the
+    next-pointer chain walk from the head segment, per-lane gathers,
+    then shrink (consumed leading segments -> pool, head advances)."""
+    cls, valid = _lane_prep(cfg, sizes, valid_i32)
+    n = cls.shape[0]
+    spc = cfg.slots_per_segment("vl")
+    wpc = cfg.words_per_chunk
+    W = cfg.total_words
+    m = n // spc + 1
+
+    member, rank, _ = _member_rank(cls, valid, c)
+    front = _ld(octl, lay.off_front + c)
+    back = _ld(octl, lay.off_back + c)
+    grant = member & (rank < back - front)
+    cnt = jnp.sum(grant.astype(jnp.int32))
+    grant_i = grant.astype(jnp.int32)
+    heap_ref = E["heap"]
+
+    head = _ld(octl, lay.off_head + c)
+    chain = [head]
+    for _hop in range(m):
+        prev = chain[-1]
+        chain.append(_ld_if(heap_ref, prev * wpc, prev >= 0, NULL))
+    chain_vec = jnp.stack(chain)
+
+    def lane(i, _):
+        g = _take(grant_i, i) != 0
+        v = front + _take(rank, i)
+        seg = _take(chain_vec, v // spc - front // spc)
+        word = seg * wpc + 1 + v % spc
+        ok = g & (word >= 0) & (word < W)
+        val = _ld_if(heap_ref, word, ok, NULL)
+        _st(offs_ref, i, jnp.where(g, val, _ld(offs_ref, i)))
+        return 0
+
+    jax.lax.fori_loop(0, n, lane, 0)
+
+    n_free = (front + cnt) // spc - front // spc
+    for j in range(m):
+        _pool_push1(octl, E["pool_store"], lay, chain[j], j < n_free)
+    _st(octl, lay.off_head + c, _take(chain_vec, n_free))
+    _st(octl, lay.off_front + c, front + cnt)
+
+
+def _page_vl_free(cfg, lay, c, offsets, sizes, valid_i32, E, octl):
+    """Class-c slice of page_alloc.free over the vl family: grow (pool
+    pops, terminate + link the new segments after the tail), per-lane
+    value writes, tail update."""
+    cls, valid = _lane_prep(cfg, sizes, valid_i32, offsets)
+    n = cls.shape[0]
+    spc = cfg.slots_per_segment("vl")
+    wpc = cfg.words_per_chunk
+    W = cfg.total_words
+    m = n // spc + 1
+
+    member, rank, cnt = _member_rank(cls, valid, c)
+    back = _ld(octl, lay.off_back + c)
+    member_i = member.astype(jnp.int32)
+    heap_ref = E["heap"]
+    tail = _ld(octl, lay.off_tail + c)
+
+    new_chunks, new_tail = _vl_grow(octl, E["pool_store"], heap_ref,
+                                    lay, spc, wpc, W, tail, back, cnt,
+                                    m)
+    seg_vec = jnp.stack([tail] + new_chunks)
+
+    def lane(i, _):
+        g = _take(member_i, i) != 0
+        v = back + _take(rank, i)
+        seg = _take(seg_vec, v // spc - back // spc)
+        word = seg * wpc + 1 + v % spc
+        _st_if(heap_ref, word, _take(offsets, i),
+               g & (word >= 0) & (word < W))
+        return 0
+
+    jax.lax.fori_loop(0, n, lane, 0)
+
+    _st(octl, lay.off_tail + c, new_tail)
+    _st(octl, lay.off_back + c, back + cnt)
+
+
+# --------------------------------------------------------------------------
+# chunk-kind bodies: the per-class chunk-drain loop
+# --------------------------------------------------------------------------
+
+def _bitmap_claim(row_u, ppc, t, maxbits, bw):
+    """Rank-select + claim over one staged bitmap row (the in-kernel
+    form of chunk_alloc._select_free_pages + _set_bits(+1), mirroring
+    kernels/alloc_txn._claim_kernel).  Returns (page_idx, new_row_u,
+    total): the first ``t`` free page indices ascending (-1 padded),
+    the row with those bits set, and the claimed count."""
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (bw, 32), 1)
+    occ = ((row_u[:, None] >> shifts) & 1).astype(jnp.int32)
+    occ = occ.reshape(maxbits)
+    p = _iota(maxbits)
+    free = (occ == 0) & (p < ppc)
+    fi = free.astype(jnp.int32)
+    order = jnp.cumsum(fi) - fi
+    chosen = free & (order < t)
+    total = jnp.sum(chosen.astype(jnp.int32))
+    onehot = chosen[None, :] & (order[None, :] == p[:, None])
+    pidx = jnp.sum(jnp.where(onehot, p[None, :], 0), axis=1)
+    page_idx = jnp.where(p < total, pidx, -1)
+    add = jnp.sum(jnp.where(chosen.reshape(bw, 32),
+                            jnp.uint32(1) << shifts, jnp.uint32(0)),
+                  axis=1)
+    return page_idx, row_u + add, total
+
+
+def _chunk_alloc(cfg, lay, family, c, sizes, valid_i32, E, octl,
+                 offs_ref):
+    """Class-c slice of chunk_alloc.alloc: the dynamic chunk-drain loop
+    — pop a chunk from the class queue (or claim a fresh one from the
+    pool), stage its bitmap row from HBM, rank-select + claim pages,
+    scatter granted offsets to the requesting lanes, re-enqueue the
+    chunk while pages remain.  Queue traffic goes through the staged
+    class row (ring), the directory row (va), or the head/tail chain
+    in ctl + heap (vl), exactly one item at a time, as in the oracle's
+    while loop."""
+    C = cfg.num_classes
+    nc = cfg.num_chunks
+    wpc = cfg.words_per_chunk
+    bw = cfg.bitmap_words_per_chunk
+    maxbits = bw * 32
+    W = cfg.total_words
+    pw0 = cfg.page_words(0)
+    spc = cfg.slots_per_segment(family)
+    max_segs = lay.max_segs
+
+    cls, valid = _lane_prep(cfg, sizes, valid_i32)
+    n = cls.shape[0]
+    member, rank, _ = _member_rank(cls, valid, c)
+    counts_c = jnp.sum(member.astype(jnp.int32))
+    pw = pw0 << c                       # page words of class c (traced)
+    ppc = cfg.words_per_chunk // pw     # pages per chunk of class c
+
+    bitmap_ref = E["bitmap"]
+    fc_ref = E["free_count"]
+    cc_ref = E["chunk_class"]
+    pool_ref = E["pool_store"]
+    heap_ref = E.get("heap")
+    qrow = E.get("queue_store")
+    dir_ref = E.get("directory")
+
+    def body(carry):
+        served, fail = carry
+        front = _ld(octl, lay.off_front + c)
+        back = _ld(octl, lay.off_back + c)
+        have = (back - front) > 0
+
+        # -- pop one chunk from the class queue (family-specific) ------
+        if family == "ring":
+            cap = qrow.shape[1]
+            val_q = _row_ld(qrow, front % cap)
+            _st(octl, lay.off_front + c, front + jnp.where(have, 1, 0))
+        elif family == "va":
+            seg = _row_ld(dir_ref, (front // spc) % max_segs)
+            word = seg * wpc + front % spc
+            val_q = _ld_if(heap_ref, word, have & (word >= 0) & (word < W))
+            crossed = (front + 1) // spc - front // spc > 0
+            _pool_push1(octl, pool_ref, lay, seg, have & crossed)
+            _st(octl, lay.off_front + c, front + jnp.where(have, 1, 0))
+        else:  # vl
+            head = _ld(octl, lay.off_head + c)
+            word = head * wpc + 1 + front % spc
+            val_q = _ld_if(heap_ref, word, have & (word >= 0) & (word < W))
+            nxt = _ld_if(heap_ref, head * wpc, head >= 0)
+            crossed = (front + 1) // spc - front // spc > 0
+            sh = have & crossed
+            _pool_push1(octl, pool_ref, lay, head, sh)
+            _st(octl, lay.off_head + c, jnp.where(sh, nxt, head))
+            _st(octl, lay.off_front + c, front + jnp.where(have, 1, 0))
+
+        # -- else claim a fresh chunk from the pool --------------------
+        pf = _ld(octl, lay.off_pool_front)
+        pb = _ld(octl, lay.off_pool_back)
+        has = (pb - pf) > 0
+        take_pool = (~have) & has
+        ch_p = _ld_if(pool_ref, pf % nc, take_pool)
+        _st(octl, lay.off_pool_front, pf + jnp.where(take_pool, 1, 0))
+        fail_now = (~have) & (~has)
+        chunk = jnp.where(have, val_q, jnp.where(has, ch_p, NULL))
+        # fresh chunk: zero bitmap row, full free count, bind to class c
+        safe_p = jnp.clip(jnp.where(ch_p < 0, ch_p + nc, ch_p), 0, nc - 1)
+        _vec_st_if(bitmap_ref, safe_p * bw, jnp.zeros(bw, jnp.int32),
+                   take_pool)
+        _st_if(fc_ref, safe_p, ppc, take_pool)
+        _st_if(cc_ref, safe_p, c, take_pool)
+
+        # -- stage the chunk's bitmap row, rank-select + claim ---------
+        # (index normalization mirrors jnp's negative-wrap + clamp
+        # gather semantics on bitmap[chunk] for the chunk = -1 case,
+        # where t == 0 makes the claim a no-op on whatever row)
+        idxc = jnp.clip(jnp.where(chunk < 0, chunk + nc, chunk), 0, nc - 1)
+        f = jnp.where(fail_now, 0, _ld(fc_ref, idxc))
+        t = jnp.minimum(counts_c - served, f)
+        row_u = jax.lax.bitcast_convert_type(
+            _vec_ld(bitmap_ref, idxc * bw, bw), jnp.uint32)
+        page_idx, new_row_u, total = _bitmap_claim(row_u, ppc, t,
+                                                   maxbits, bw)
+        pl.store(bitmap_ref, (pl.ds(idxc * bw, bw),),
+                 jax.lax.bitcast_convert_type(new_row_u, jnp.int32))
+        _st_if(fc_ref, idxc, f - total, total > 0)
+
+        # -- scatter granted offsets to the lanes of this iteration ----
+        lane_sel = member & (rank >= served) & (rank < served + total)
+        pidx_lane = _gather_small(page_idx, rank - served)
+        offs_ref[...] = jnp.where(lane_sel, chunk * wpc + pidx_lane * pw,
+                                  offs_ref[...])
+
+        # -- chunk still has pages -> back into the class queue --------
+        leftover = (~fail_now) & (f - total > 0)
+        back = _ld(octl, lay.off_back + c)
+        if family == "ring":
+            cap = qrow.shape[1]
+            _row_st_if(qrow, back % cap, chunk, leftover)
+            _st(octl, lay.off_back + c,
+                back + jnp.where(leftover, 1, 0))
+        elif family == "va":
+            lv = jnp.where(leftover, 1, 0)
+            _va_grow(octl, pool_ref, dir_ref, lay, spc, back, lv, 1)
+            seg = _row_ld(dir_ref, (back // spc) % max_segs)
+            word = seg * wpc + back % spc
+            _st_if(heap_ref, word, chunk,
+                   leftover & (word >= 0) & (word < W))
+            _st(octl, lay.off_back + c, back + lv)
+        else:  # vl
+            tail = _ld(octl, lay.off_tail + c)
+            lv = jnp.where(leftover, 1, 0)
+            _, new_tail = _vl_grow(octl, pool_ref, heap_ref, lay, spc,
+                                   wpc, W, tail, back, lv, 1)
+            word = tail * wpc + 1 + back % spc
+            _st_if(heap_ref, word, chunk,
+                   leftover & (word >= 0) & (word < W))
+            _st(octl, lay.off_tail + c, new_tail)
+            _st(octl, lay.off_back + c, back + lv)
+
+        return served + t, fail | fail_now
+
+    jax.lax.while_loop(
+        lambda cr: (cr[0] < counts_c) & ~cr[1],
+        body, (jnp.int32(0), jnp.asarray(False)))
+
+
+def _chunk_free(cfg, lay, family, c, offsets, sizes, valid_i32, E, octl,
+                aux_ref, old_free_ref):
+    """Chunk-kind free.  Step 0 clears the freed page bits (one staged
+    bitmap-row RMW per lane), bumps free counts, and records the
+    full->non-full transitions in ``aux``; every step then re-enqueues
+    its own class's revived chunks (ascending chunk id, the oracle's
+    nonzero order) through the class row / directory / chain."""
+    C = cfg.num_classes
+    nc = cfg.num_chunks
+    wpc = cfg.words_per_chunk
+    bw = cfg.bitmap_words_per_chunk
+    W = cfg.total_words
+    pw0 = cfg.page_words(0)
+    spc = cfg.slots_per_segment(family)
+    max_segs = lay.max_segs
+
+    cls, valid = _lane_prep(cfg, sizes, valid_i32, offsets)
+    n = cls.shape[0]
+    m = n // spc + 1
+
+    bitmap_ref = E["bitmap"]
+    fc_ref = E["free_count"]
+    pool_ref = E.get("pool_store")
+    heap_ref = E.get("heap")
+    qrow = E.get("queue_store")
+    dir_ref = E.get("directory")
+
+    chunk_v = offsets // wpc
+    pw_v = pw0 << (cls % C)
+    page_v = (offsets % wpc) // pw_v
+    ok_v = valid & (chunk_v >= 0) & (chunk_v < nc)
+    ok_i = ok_v.astype(jnp.int32)
+    word_v = chunk_v * bw + page_v // 32
+    bit_v = (page_v % 32).astype(jnp.uint32)
+
+    @pl.when(c == 0)
+    def _clear():
+        # full -> non-full transitions, against the PRE-clear counts
+        iota_nc = jax.lax.broadcasted_iota(jnp.int32, (n, nc), 1)
+        touched = jnp.any((chunk_v[:, None] == iota_nc) & ok_v[:, None],
+                          axis=0)
+        revived = touched & (old_free_ref[...] == 0)
+        aux_ref[...] = revived.astype(jnp.int32)
+
+        def lane(i, _):
+            ok = _take(ok_i, i) != 0
+            a = _take(word_v, i)
+            old_u = jax.lax.bitcast_convert_type(
+                jnp.reshape(_ld_if(bitmap_ref, a, ok, 0), (1,)),
+                jnp.uint32)
+            bitval = jnp.uint32(1) << _take(bit_v, i)
+            new = jax.lax.bitcast_convert_type(old_u - bitval,
+                                               jnp.int32)[0]
+            _st_if(bitmap_ref, a, new, ok)
+            ch = _take(chunk_v, i)
+            cur = _ld_if(fc_ref, ch, ok, 0)
+            _st_if(fc_ref, ch, cur + 1, ok)
+            return 0
+
+        jax.lax.fori_loop(0, n, lane, 0)
+
+    # -- re-enqueue this class's revived chunks ------------------------
+    rev = aux_ref[...] != 0
+    active = rev & (E["chunk_class"][...] == c)
+    ai = active.astype(jnp.int32)
+    rank_v = jnp.cumsum(ai) - ai
+    cnt = jnp.sum(ai)
+    back = _ld(octl, lay.off_back + c)
+
+    if family == "ring":
+        cap = qrow.shape[1]
+
+        def put(k, _):
+            _row_st_if(qrow, (back + _take(rank_v, k)) % cap, k,
+                       _take(ai, k) != 0)
+            return 0
+
+        jax.lax.fori_loop(0, nc, put, 0)
+    elif family == "va":
+        _va_grow(octl, pool_ref, dir_ref, lay, spc, back, cnt, m)
+
+        def put(k, _):
+            v = back + _take(rank_v, k)
+            seg = _row_ld(dir_ref, (v // spc) % max_segs)
+            word = seg * wpc + v % spc
+            _st_if(heap_ref, word, k,
+                   (_take(ai, k) != 0) & (word >= 0) & (word < W))
+            return 0
+
+        jax.lax.fori_loop(0, nc, put, 0)
+    else:  # vl
+        tail = _ld(octl, lay.off_tail + c)
+        new_chunks, new_tail = _vl_grow(octl, pool_ref, heap_ref, lay,
+                                        spc, wpc, W, tail, back, cnt, m)
+        seg_vec = jnp.stack([tail] + new_chunks)
+
+        def put(k, _):
+            v = back + _take(rank_v, k)
+            seg = _take(seg_vec, v // spc - back // spc)
+            word = seg * wpc + 1 + v % spc
+            _st_if(heap_ref, word, k,
+                   (_take(ai, k) != 0) & (word >= 0) & (word < W))
+            return 0
+
+        jax.lax.fori_loop(0, nc, put, 0)
+        _st(octl, lay.off_tail + c, new_tail)
+
+    _st(octl, lay.off_back + c, back + cnt)
+
+
+# --------------------------------------------------------------------------
+# wrapper: per-region specs from the ArenaLayout, one pallas_call
+# --------------------------------------------------------------------------
+#
+# Region sets per transaction: `reads` enter the kernel, `writes` come
+# back out (everything else bypasses it — arena.split/join are static
+# slices).  A region in both with blocking "hbm" is input/output-
+# aliased, so on device the transaction updates it in place.
+
+_READS = {
+    ("page", "ring", "alloc"): ("queue_store",),
+    ("page", "ring", "free"): ("queue_store",),
+    ("page", "va", "alloc"): ("heap", "pool_store", "directory"),
+    ("page", "va", "free"): ("heap", "pool_store", "directory"),
+    ("page", "vl", "alloc"): ("heap", "pool_store"),
+    ("page", "vl", "free"): ("heap", "pool_store"),
+    ("chunk", "ring", "alloc"): ("pool_store", "queue_store", "bitmap",
+                                 "free_count", "chunk_class"),
+    ("chunk", "ring", "free"): ("queue_store", "bitmap", "free_count",
+                                "chunk_class"),
+    ("chunk", "va", "alloc"): ("heap", "pool_store", "directory",
+                               "bitmap", "free_count", "chunk_class"),
+    ("chunk", "va", "free"): ("heap", "pool_store", "directory",
+                              "bitmap", "free_count", "chunk_class"),
+    ("chunk", "vl", "alloc"): ("heap", "pool_store", "bitmap",
+                               "free_count", "chunk_class"),
+    ("chunk", "vl", "free"): ("heap", "pool_store", "bitmap",
+                              "free_count", "chunk_class"),
+}
+
+_WRITES = {
+    ("page", "ring", "alloc"): (),
+    ("page", "ring", "free"): ("queue_store",),
+    ("page", "va", "alloc"): ("pool_store",),
+    ("page", "va", "free"): ("heap", "directory"),
+    ("page", "vl", "alloc"): ("pool_store",),
+    ("page", "vl", "free"): ("heap",),
+    ("chunk", "ring", "alloc"): ("queue_store", "bitmap", "free_count",
+                                 "chunk_class"),
+    ("chunk", "ring", "free"): ("queue_store", "bitmap", "free_count"),
+    ("chunk", "va", "alloc"): ("heap", "pool_store", "directory",
+                               "bitmap", "free_count", "chunk_class"),
+    ("chunk", "va", "free"): ("heap", "directory", "bitmap",
+                              "free_count"),
+    ("chunk", "vl", "alloc"): ("heap", "pool_store", "bitmap",
+                               "free_count", "chunk_class"),
+    ("chunk", "vl", "free"): ("heap", "bitmap", "free_count"),
+}
+
+
+def _region_arr(lay, parts, name):
+    r = lay.region(name)
+    return (parts[name].reshape(r.shape) if r.blocking == "row"
+            else parts[name])
+
+
+def _region_spec(lay, name):
+    r = lay.region(name)
+    if r.blocking == "row":
+        return pl.BlockSpec((1,) + r.shape[1:], lambda c, s: (c, 0))
+    if r.blocking == "resident":
+        return pl.BlockSpec((r.words,), lambda c, s: (0,))
+    return pl.BlockSpec(memory_space=pltpu.ANY)
+
+
+def _region_shape(lay, name):
+    r = lay.region(name)
+    shape = r.shape if r.blocking == "row" else (r.words,)
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _txn_call(cfg, kind, family, op, mem, ctl, lanes, n, interpret):
+    lay = arena.layout(cfg, kind, family)
+    parts = arena.split(lay, mem)
+    reads = _READS[(kind, family, op)]
+    writes = _WRITES[(kind, family, op)]
+    C = cfg.num_classes
+
+    in_arrays = list(lanes) + [_region_arr(lay, parts, nm)
+                               for nm in reads]
+    in_specs = ([pl.BlockSpec((n,), lambda c, s: (0,))] * len(lanes)
+                + [_region_spec(lay, nm) for nm in reads])
+
+    out_specs = [_region_spec(lay, nm) for nm in writes]
+    out_shapes = [_region_shape(lay, nm) for nm in writes]
+    out_specs.append(pl.BlockSpec((lay.ctl_words,), lambda c, s: (0,)))
+    out_shapes.append(jax.ShapeDtypeStruct((lay.ctl_words,), jnp.int32))
+    if op == "alloc":
+        out_specs.append(pl.BlockSpec((n,), lambda c, s: (0,)))
+        out_shapes.append(jax.ShapeDtypeStruct((n,), jnp.int32))
+    elif kind == "chunk":
+        # revived-chunk flags, computed at step 0 and read by every
+        # class step (grid-persistent VMEM block)
+        out_specs.append(pl.BlockSpec((cfg.num_chunks,),
+                                      lambda c, s: (0,)))
+        out_shapes.append(jax.ShapeDtypeStruct((cfg.num_chunks,),
+                                               jnp.int32))
+
+    aliases = {1 + len(lanes) + reads.index(nm): writes.index(nm)
+               for nm in writes if lay.region(nm).blocking == "hbm"}
+
+    n_in = len(in_arrays)
+    n_w = len(writes)
+
+    def kernel(ctl_ref, *refs):
+        in_refs, out_refs = refs[:n_in], refs[n_in:]
+        lane_vals = [r[...] for r in in_refs[:len(lanes)]]
+        R = dict(zip(reads, in_refs[len(lanes):]))
+        O = dict(zip(writes, out_refs[:n_w]))
+        octl = out_refs[n_w]
+        c = pl.program_id(0)
+
+        @pl.when(c == 0)
+        def _init():
+            octl[...] = ctl_ref[...]
+            for nm in writes:
+                blocking = lay.region(nm).blocking
+                if blocking == "resident":
+                    O[nm][...] = R[nm][...]
+                elif blocking == "hbm" and interpret:
+                    # hbm write regions are input/output-aliased: on
+                    # device in == out and this copy would be a no-op
+                    # O(region) DMA, so it exists only for interpret
+                    # mode, whose output buffers start unaliased.
+                    O[nm][...] = R[nm][...]
+            if op == "alloc":
+                out_refs[n_w + 1][...] = jnp.full((n,), NULL, jnp.int32)
+
+        for nm in writes:          # stage this class's row through VMEM
+            if lay.region(nm).blocking == "row":
+                O[nm][0, :] = R[nm][0, :]
+        E = {nm: O.get(nm, R[nm]) for nm in reads}
+
+        if op == "alloc":
+            offs_ref = out_refs[n_w + 1]
+            if kind == "page":
+                fn = {"ring": _page_ring_alloc, "va": _page_va_alloc,
+                      "vl": _page_vl_alloc}[family]
+                fn(cfg, lay, c, lane_vals[0], lane_vals[1], E, octl,
+                   offs_ref)
+            else:
+                _chunk_alloc(cfg, lay, family, c, lane_vals[0],
+                             lane_vals[1], E, octl, offs_ref)
+        else:
+            offsets, sizes, valid = lane_vals
+            if kind == "page":
+                fn = {"ring": _page_ring_free, "va": _page_va_free,
+                      "vl": _page_vl_free}[family]
+                fn(cfg, lay, c, offsets, sizes, valid, E, octl)
+            else:
+                _chunk_free(cfg, lay, family, c, offsets, sizes, valid,
+                            E, octl, out_refs[n_w + 1],
+                            R["free_count"])
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1, grid=(C,),
+        in_specs=in_specs, out_specs=out_specs)
+    outs = pl.pallas_call(
+        kernel, grid_spec=grid_spec, out_shape=out_shapes,
+        input_output_aliases=aliases, interpret=interpret,
+    )(ctl.astype(jnp.int32), *in_arrays)
+
+    new_parts = dict(parts)
+    for nm, val in zip(writes, outs[:n_w]):
+        new_parts[nm] = val
+    return arena.join(lay, new_parts), outs[n_w], outs[n_w + 1:]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "kind", "family", "interpret"))
+def arena_alloc_txn_blocked(cfg, kind, family, mem, ctl, sizes_bytes,
+                            mask, *, interpret: bool = False):
+    """Region-blocked whole-transaction alloc: ONE ``pallas_call``,
+    bit-identical to ``transactions.alloc_math`` and to the whole-arena
+    lowering.  Returns ``(new_mem, new_ctl, offsets)``."""
+    n = sizes_bytes.shape[0]
+    lanes = (sizes_bytes.astype(jnp.int32), mask.astype(jnp.int32))
+    mem2, octl, extra = _txn_call(cfg, kind, family, "alloc", mem, ctl,
+                                  lanes, n, interpret)
+    return mem2, octl, extra[0]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "kind", "family", "interpret"))
+def arena_free_txn_blocked(cfg, kind, family, mem, ctl, offsets_words,
+                           sizes_bytes, mask, *, interpret: bool = False):
+    """Region-blocked whole-transaction free.  Returns
+    ``(new_mem, new_ctl)``."""
+    n = sizes_bytes.shape[0]
+    lanes = (offsets_words.astype(jnp.int32),
+             sizes_bytes.astype(jnp.int32), mask.astype(jnp.int32))
+    mem2, octl, _ = _txn_call(cfg, kind, family, "free", mem, ctl,
+                              lanes, n, interpret)
+    return mem2, octl

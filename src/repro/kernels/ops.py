@@ -7,6 +7,8 @@ pure-jnp oracles used by the tests.
 """
 from __future__ import annotations
 
+import os
+
 import jax
 import jax.numpy as jnp
 
@@ -42,16 +44,57 @@ def chunk_txn_claim(row, take, *, ppc: int):
                                       interpret=_interpret())
 
 
-def arena_alloc_txn(cfg, kind, family, mem, ctl, sizes_bytes, mask):
+LOWERINGS = ("whole", "blocked", "auto")
+
+
+def resolve_lowering(lowering: str = "auto") -> str:
+    """Concrete kernel lowering for the fused arena transactions.
+
+    ``whole``    the kernel takes the full ``mem`` image as one ref —
+                 simplest, but only lowers while the arena fits VMEM;
+    ``blocked``  the region-blocked compiled lowering (kernels/
+                 alloc_txn_blocked.py): per-region BlockSpecs, class-row
+                 grid, scalar-prefetched control block (DESIGN.md §8);
+    ``auto``     honours ``REPRO_ALLOC_LOWERING`` (CI forces the
+                 blocked matrix through it), else picks ``blocked`` on
+                 TPU — where whole-arena refs stop lowering at serving
+                 sizes — and ``whole`` in CPU interpret mode.
+    """
+    if lowering not in LOWERINGS:
+        raise ValueError(
+            f"unknown lowering {lowering!r}; pick from {LOWERINGS}")
+    if lowering != "auto":
+        return lowering
+    env = os.environ.get("REPRO_ALLOC_LOWERING", "")
+    if env:
+        if env not in ("whole", "blocked"):
+            raise ValueError(
+                f"REPRO_ALLOC_LOWERING={env!r}; expected whole|blocked")
+        return env
+    return "blocked" if jax.default_backend() == "tpu" else "whole"
+
+
+def arena_alloc_txn(cfg, kind, family, mem, ctl, sizes_bytes, mask,
+                    lowering: str = "auto"):
     """Whole alloc transaction (any variant) in one pallas_call."""
+    if resolve_lowering(lowering) == "blocked":
+        from repro.kernels import alloc_txn_blocked as _blk
+        return _blk.arena_alloc_txn_blocked(cfg, kind, family, mem, ctl,
+                                            sizes_bytes, mask,
+                                            interpret=_interpret())
     return _alloc_txn.arena_alloc_txn(cfg, kind, family, mem, ctl,
                                       sizes_bytes, mask,
                                       interpret=_interpret())
 
 
 def arena_free_txn(cfg, kind, family, mem, ctl, offsets_words,
-                   sizes_bytes, mask):
+                   sizes_bytes, mask, lowering: str = "auto"):
     """Whole free transaction (any variant) in one pallas_call."""
+    if resolve_lowering(lowering) == "blocked":
+        from repro.kernels import alloc_txn_blocked as _blk
+        return _blk.arena_free_txn_blocked(cfg, kind, family, mem, ctl,
+                                           offsets_words, sizes_bytes,
+                                           mask, interpret=_interpret())
     return _alloc_txn.arena_free_txn(cfg, kind, family, mem, ctl,
                                      offsets_words, sizes_bytes, mask,
                                      interpret=_interpret())

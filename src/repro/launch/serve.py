@@ -24,6 +24,11 @@ def main(argv=None):
                     default="jnp",
                     help="allocator transaction backend (fused Pallas "
                          "kernels or jnp reference path)")
+    ap.add_argument("--alloc-lowering",
+                    choices=("auto", "whole", "blocked"), default="auto",
+                    help="Pallas kernel lowering (whole-arena refs vs "
+                         "region-blocked; DESIGN.md §8) — the active "
+                         "one is reported in the engine stats")
     args = ap.parse_args(argv)
 
     import jax
@@ -39,7 +44,8 @@ def main(argv=None):
     params = model.init(jax.random.PRNGKey(args.seed))
     eng = ServingEngine(model, params, max_batch=args.max_batch,
                         max_seq=args.max_seq,
-                        alloc_backend=args.alloc_backend)
+                        alloc_backend=args.alloc_backend,
+                        alloc_lowering=args.alloc_lowering)
 
     rng = np.random.default_rng(args.seed)
     for _ in range(args.requests):

@@ -109,7 +109,8 @@ def abstract_paged_kv(num_layers, num_pages, batch, max_pages_per_seq,
     )
 
 
-def make_kv_allocator(num_pages: int, backend: str = "jnp"):
+def make_kv_allocator(num_pages: int, backend: str = "jnp",
+                      lowering: str = "auto"):
     """Ouroboros instance managing the page-id space.
 
     Each logical page is one 256 B region of a single-size-class heap;
@@ -119,8 +120,10 @@ def make_kv_allocator(num_pages: int, backend: str = "jnp"):
     next-pointer chains, bitmaps, and counters all live at fixed word
     offsets in it, so with ``backend="pallas"`` every page grant and
     release the engine issues is ONE fused kernel launch, segment walk
-    included.  Both backends are bit-identical, so serving behaviour is
-    backend-invariant.
+    included; ``lowering`` picks the kernel shape (whole-arena refs vs
+    the region-blocked compiled lowering, DESIGN.md §8).  Backends and
+    lowerings are bit-identical, so serving behaviour is invariant to
+    both.
 
     Returns (ouro, words_per_page, physical_pages).  Queue segments live
     in the same heap (the ouroboros property), so granted ids are a
@@ -136,7 +139,7 @@ def make_kv_allocator(num_pages: int, backend: str = "jnp"):
     cfg = HeapConfig(total_bytes=(data_chunks + seg_chunks) * chunk,
                      chunk_bytes=chunk, min_page_bytes=256)
     physical_pages = cfg.total_words // 64
-    return Ouroboros(cfg, "vl_chunk", backend), 64, physical_pages
+    return Ouroboros(cfg, "vl_chunk", backend, lowering), 64, physical_pages
 
 
 def _quant(x):

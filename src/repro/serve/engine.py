@@ -39,7 +39,21 @@ class ServingEngine:
     def __init__(self, model: Model, params, *, max_batch: int = 8,
                  max_seq: int = 512, num_pages: Optional[int] = None,
                  kv_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
-                 sample: str = "greedy", alloc_backend: str = "jnp"):
+                 sample: str = "greedy", alloc_backend: str = "jnp",
+                 alloc_lowering: str = "auto"):
+        # Validate the allocator knobs before any expensive setup: a
+        # typo like alloc_backend="palas" must fail here with the menu
+        # of choices, not surface later (or worse, quietly behave like
+        # a different configuration).
+        from repro.core import BACKENDS, LOWERINGS
+        if alloc_backend not in BACKENDS:
+            raise ValueError(
+                f"unknown alloc_backend {alloc_backend!r}; pick from "
+                f"{BACKENDS}")
+        if alloc_lowering not in LOWERINGS:
+            raise ValueError(
+                f"unknown alloc_lowering {alloc_lowering!r}; pick from "
+                f"{LOWERINGS}")
         cfg = model.cfg
         self.model, self.params, self.cfg = model, params, cfg
         self.max_batch, self.max_seq = max_batch, max_seq
@@ -54,7 +68,8 @@ class ServingEngine:
         # makes every bulk grant/release below a single fused kernel
         # launch (vl segment walk included), bit-identical to "jnp".
         self.ouro, self.wpp, physical_pages = KV.make_kv_allocator(
-            self.num_pages, backend=alloc_backend)
+            self.num_pages, backend=alloc_backend,
+            lowering=alloc_lowering)
         self.alloc_state = self.ouro.init()
         self.page_bytes = 256  # logical bytes per page in the heap
 
@@ -74,11 +89,17 @@ class ServingEngine:
         self._decode = jax.jit(
             lambda p, t, c: model.decode_step(p, t, c,
                                               dtype=compute_dtype))
+        from repro.kernels.ops import resolve_lowering
         self.stats = {"allocs": 0, "frees": 0, "steps": 0,
                       "alloc_failures": 0,
-                      # observability: device words the arena occupies
+                      # observability: device words the arena occupies,
+                      # and which transaction path actually runs
                       "arena_mem_words": int(self.alloc_state.mem.shape[0]),
-                      "arena_ctl_words": int(self.alloc_state.ctl.shape[0])}
+                      "arena_ctl_words": int(self.alloc_state.ctl.shape[0]),
+                      "alloc_backend": alloc_backend,
+                      "alloc_lowering": (resolve_lowering(alloc_lowering)
+                                         if alloc_backend == "pallas"
+                                         else "none")}
 
     # ---- request lifecycle -------------------------------------------------
     def submit(self, prompt, max_new_tokens=32, eos_id=None) -> int:

@@ -22,6 +22,11 @@ def pytest_addoption(parser):
 
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running integration test")
+    config.addinivalue_line(
+        "markers",
+        "compiled_lowering: exercises the region-blocked compiled "
+        "lowering of the fused arena kernels (CI runs these under "
+        "REPRO_ALLOC_LOWERING=blocked as a dedicated job)")
 
 
 def pytest_collection_modifyitems(config, items):

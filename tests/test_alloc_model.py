@@ -1,0 +1,190 @@
+"""Stateful allocator model: random alloc/free traces replayed through
+every (backend, lowering) implementation against a pure-Python
+reference model.
+
+The model tracks live grants as an interval map and asserts, after
+every transaction and for each of the six variants:
+
+- **uniqueness** — no live offset is ever handed out twice;
+- **containment** — every grant lies inside its size class's region:
+  the offset is within the heap, aligned to the class page size, and
+  the granted page [offset, offset + page_words) never crosses a chunk
+  boundary (pages are carved from chunks — paper §4);
+- **non-overlap** — granted pages of live allocations are disjoint;
+- **reuse** — free-then-realloc hands pages back out: after freeing k
+  class-c pages, a fresh batch of k same-class requests succeeds.
+
+All implementations — the jnp oracle, the whole-arena Pallas kernel,
+and the region-blocked compiled lowering — replay the same trace in
+lockstep and must grant identical offsets (exact-equality cross-check
+on top of the model invariants).
+
+``hypothesis`` is optional, following test_allocator_hypothesis.py:
+with it installed the trace generator runs under shrinking strategies;
+without it, seeded ``np.random`` traces replay the same checker so the
+invariants stay guarded either way.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import HeapConfig, Ouroboros, VARIANTS
+
+try:  # optional dependency — see fallback below
+    from hypothesis import HealthCheck, given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+CFG = HeapConfig(total_bytes=1 << 16, chunk_bytes=1 << 11,
+                 min_page_bytes=16)
+SIZES = [16, 24, 100, 256, 1000, 2048]
+N = 16  # lane width shared with test_alloc_txn_parity: one jit cache
+
+# every implementation triple replayed in lockstep
+IMPLS = (("jnp", "auto"), ("pallas", "whole"), ("pallas", "blocked"))
+
+
+class RefModel:
+    """Pure-Python reference allocator model (host truth)."""
+
+    def __init__(self, cfg: HeapConfig):
+        self.cfg = cfg
+        self.live = {}  # offset -> (size_bytes, class, page_words)
+
+    def on_alloc(self, offs, sizes):
+        cfg = self.cfg
+        for o, s in zip(offs, sizes):
+            if o < 0:
+                continue
+            o, s = int(o), int(s)
+            c = cfg.size_to_class(s)
+            pw = cfg.page_words(c)
+            # containment: in-heap, class-aligned, chunk-contained
+            assert 0 <= o < cfg.total_words, (o, s)
+            assert o % pw == 0, f"offset {o} not aligned to class {c}"
+            assert o // cfg.words_per_chunk == \
+                (o + pw - 1) // cfg.words_per_chunk, \
+                f"page at {o} crosses a chunk boundary"
+            # uniqueness: never granted twice while live
+            assert o not in self.live, f"offset {o} double-granted"
+            # non-overlap against every live page
+            for lo, (_, _, lpw) in self.live.items():
+                assert o + pw <= lo or lo + lpw <= o, \
+                    f"grant [{o},{o + pw}) overlaps live [{lo},{lo + lpw})"
+            self.live[o] = (s, c, pw)
+
+    def on_free(self, offs):
+        for o in offs:
+            self.live.pop(int(o), None)
+
+
+def _mk(variant):
+    return [Ouroboros(CFG, variant, backend, lowering)
+            for backend, lowering in IMPLS]
+
+
+def _lockstep_alloc(impls, states, sizes, mask):
+    outs = [o.alloc(s, sizes, mask) for o, s in zip(impls, states)]
+    states = [s for s, _ in outs]
+    offs = [np.asarray(x) for _, x in outs]
+    for got, (backend, lowering) in zip(offs[1:], IMPLS[1:]):
+        np.testing.assert_array_equal(
+            offs[0], got,
+            err_msg=f"{backend}/{lowering} diverged from the oracle")
+    return states, offs[0]
+
+
+def check_model_trace(variant, ops, seed):
+    """Replay ``ops`` through all implementations, assert the model
+    invariants and cross-implementation grant equality throughout."""
+    rng = np.random.default_rng(seed)
+    impls = _mk(variant)
+    states = [o.init() for o in impls]
+    model = RefModel(CFG)
+
+    for kind, sizes in ops:
+        k = min(len(sizes), N)
+        if kind == "alloc":
+            sz = np.zeros(N, np.int32)
+            sz[:k] = sizes[:k]
+            mask = jnp.asarray(np.arange(N) < k)
+            states, offs = _lockstep_alloc(
+                impls, states, jnp.asarray(sz, jnp.int32), mask)
+            model.on_alloc(offs[:k], sz[:k])
+        else:
+            if not model.live:
+                continue
+            keys = list(model.live)
+            pick = rng.choice(len(keys), min(len(keys), k),
+                              replace=False)
+            drop = [keys[i] for i in pick]
+            fo = np.full(N, -1, np.int32)
+            fs = np.zeros(N, np.int32)
+            fo[:len(drop)] = drop
+            fs[:len(drop)] = [model.live[o][0] for o in drop]
+            fm = jnp.asarray(fo >= 0)
+            states = [o.free(s, jnp.asarray(fo), jnp.asarray(fs), fm)
+                      for o, s in zip(impls, states)]
+            model.on_free(drop)
+
+    # reuse: free every live grant of the most common class, then
+    # re-alloc that many pages of the class — all must succeed.
+    if model.live:
+        classes = [c for (_, c, _) in model.live.values()]
+        c = max(set(classes), key=classes.count)
+        drop = [o for o, (_, cc, _) in model.live.items() if cc == c]
+        k = min(len(drop), N)
+        fo = np.full(N, -1, np.int32)
+        fs = np.zeros(N, np.int32)
+        fo[:k] = drop[:k]
+        fs[:k] = [model.live[o][0] for o in drop[:k]]
+        fm = jnp.asarray(fo >= 0)
+        states = [o.free(s, jnp.asarray(fo), jnp.asarray(fs), fm)
+                  for o, s in zip(impls, states)]
+        model.on_free(drop[:k])
+        sz = np.zeros(N, np.int32)
+        sz[:k] = CFG.page_bytes(c)
+        mask = jnp.asarray(np.arange(N) < k)
+        states, offs = _lockstep_alloc(impls, states,
+                                       jnp.asarray(sz, jnp.int32), mask)
+        assert (offs[:k] >= 0).all(), \
+            f"free-then-realloc failed to reuse class-{c} pages"
+        model.on_alloc(offs[:k], sz[:k])
+
+
+if HAVE_HYPOTHESIS:
+    op = st.tuples(
+        st.sampled_from(["alloc", "free"]),
+        st.lists(st.sampled_from(SIZES), min_size=1, max_size=N),
+    )
+
+    @pytest.mark.compiled_lowering
+    @settings(max_examples=10, deadline=None,
+              suppress_health_check=list(HealthCheck))
+    @given(variant=st.sampled_from(VARIANTS),
+           ops=st.lists(op, min_size=1, max_size=6),
+           seed=st.integers(0, 2**16))
+    def test_alloc_model(variant, ops, seed):
+        check_model_trace(variant, ops, seed)
+
+
+def _random_ops(rng):
+    """Seeded stand-in for the hypothesis strategy above (same shape
+    as test_allocator_hypothesis._random_ops)."""
+    ops = []
+    for _ in range(int(rng.integers(2, 7))):
+        kind = "alloc" if rng.random() < 0.6 else "free"
+        ops.append((kind, [int(s) for s in rng.choice(SIZES, N)]))
+    return ops
+
+
+@pytest.mark.compiled_lowering
+@pytest.mark.parametrize("variant", VARIANTS)
+@pytest.mark.parametrize("seed", [0, 1])
+def test_alloc_model_fallback(variant, seed):
+    """Pure-pytest randomized form of the stateful model property:
+    runs with or without hypothesis installed."""
+    rng = np.random.default_rng(seed)
+    check_model_trace(variant, _random_ops(rng), seed)

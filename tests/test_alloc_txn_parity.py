@@ -3,8 +3,10 @@ reference oracle, on randomized alloc/free/write/check traces.
 
 For every variant the same trace is replayed through
 ``Ouroboros(cfg, variant, backend="jnp")`` and ``backend="pallas"``
-(interpret mode on CPU — the compiled path's exact semantics) and the
-two executions must be **bit-identical** at every step:
+under BOTH kernel lowerings — ``whole`` (full-arena refs) and
+``blocked`` (the region-blocked compiled lowering, DESIGN.md §8) —
+(interpret mode on CPU — the compiled path's exact semantics) and all
+three executions must be **bit-identical** at every step:
 
   - granted offsets and failure masks (−1 lanes)
   - ``check_pattern`` integrity verdicts
@@ -14,7 +16,8 @@ two executions must be **bit-identical** at every step:
 Beyond lockstep equality this file pins the arena-era contracts:
 
   - one ``pallas_call`` per whole transaction (alloc and free), for all
-    six variants, asserted on the jaxpr — the ISSUE's fusion criterion;
+    six variants and BOTH lowerings, asserted on the jaxpr — the
+    fusion criterion survives the region-blocked refactor;
   - va/vl segment grow/shrink runs *inside* that one kernel: the
     small-chunk config below forces directory/chain growth and
     segment reclaim mid-trace (asserted via the pool counters, which
@@ -51,6 +54,9 @@ N = 16       # fixed lane width so every transaction reuses one jit cache
 OPS = 8
 SEEDS = (0, 1)
 
+# the Pallas implementations replayed in lockstep against the oracle
+LOWERINGS = ("whole", "blocked")
+
 VIRT_VARIANTS = tuple(v for v in VARIANTS if "_" in v)
 
 
@@ -64,11 +70,16 @@ def _assert_state_equal(variant, step, sj, sp):
 
 
 def _replay(variant, seed, cfg=CFG, sizes_menu=SIZES, ops=OPS):
+    """Lockstep replay: the jnp oracle vs the Pallas backend under
+    every kernel lowering, word-identical arenas after every op."""
     rng = np.random.default_rng(seed)
     oj = Ouroboros(cfg, variant, backend="jnp")
-    op = Ouroboros(cfg, variant, backend="pallas")
-    sj, sp = oj.init(), op.init()
-    _assert_state_equal(variant, "init", sj, sp)
+    ops_p = [Ouroboros(cfg, variant, backend="pallas", lowering=lw)
+             for lw in LOWERINGS]
+    sj = oj.init()
+    sps = [o.init() for o in ops_p]
+    for lw, sp in zip(LOWERINGS, sps):
+        _assert_state_equal(f"{variant}/{lw}", "init", sj, sp)
     pool_ctr0 = np.asarray(sj.ctl)[-2:].copy()
     pool_moved = False
 
@@ -80,22 +91,27 @@ def _replay(variant, seed, cfg=CFG, sizes_menu=SIZES, ops=OPS):
             sizes = jnp.asarray(rng.choice(sizes_menu, N), jnp.int32)
             mask = jnp.asarray(rng.random(N) < 0.85)
             sj, offj = oj.alloc(sj, sizes, mask)
-            sp, offp = op.alloc(sp, sizes, mask)
-            offj, offp = np.asarray(offj), np.asarray(offp)
-            np.testing.assert_array_equal(
-                offj, offp,
-                err_msg=f"{variant}: offsets/failure masks diverged "
-                        f"at op {step}")
+            offj = np.asarray(offj)
+            outs = [o.alloc(s, sizes, mask)
+                    for o, s in zip(ops_p, sps)]
+            sps = [s for s, _ in outs]
+            for lw, (_, offp) in zip(LOWERINGS, outs):
+                np.testing.assert_array_equal(
+                    offj, np.asarray(offp),
+                    err_msg=f"{variant}/{lw}: offsets/failure masks "
+                            f"diverged at op {step}")
             tags = jnp.arange(tagc, tagc + N, dtype=jnp.int32)
             tagc += N
             so = jnp.asarray(offj, jnp.int32)
             sj = oj.write_pattern(sj, so, sizes, tags)
-            sp = op.write_pattern(sp, so, sizes, tags)
+            sps = [o.write_pattern(s, so, sizes, tags)
+                   for o, s in zip(ops_p, sps)]
             cj = np.asarray(oj.check_pattern(sj, so, sizes, tags))
-            cp = np.asarray(op.check_pattern(sp, so, sizes, tags))
-            np.testing.assert_array_equal(
-                cj, cp, err_msg=f"{variant}: integrity verdicts "
-                                f"diverged at op {step}")
+            for lw, o, s in zip(LOWERINGS, ops_p, sps):
+                cp = np.asarray(o.check_pattern(s, so, sizes, tags))
+                np.testing.assert_array_equal(
+                    cj, cp, err_msg=f"{variant}/{lw}: integrity "
+                                    f"verdicts diverged at op {step}")
             live.extend((int(o), int(s))
                         for o, s in zip(offj, np.asarray(sizes)) if o >= 0)
         else:
@@ -109,19 +125,23 @@ def _replay(variant, seed, cfg=CFG, sizes_menu=SIZES, ops=OPS):
             fs[:k] = [s for _, s in drop]
             fm = jnp.asarray(fo >= 0)
             sj = oj.free(sj, jnp.asarray(fo), jnp.asarray(fs), fm)
-            sp = op.free(sp, jnp.asarray(fo), jnp.asarray(fs), fm)
-        _assert_state_equal(variant, step, sj, sp)
+            sps = [o.free(s, jnp.asarray(fo), jnp.asarray(fs), fm)
+                   for o, s in zip(ops_p, sps)]
+        for lw, sp in zip(LOWERINGS, sps):
+            _assert_state_equal(f"{variant}/{lw}", step, sj, sp)
         pool_moved |= bool(
             (np.asarray(sj.ctl)[-2:] != pool_ctr0).any())
     return pool_moved
 
 
+@pytest.mark.compiled_lowering
 @pytest.mark.parametrize("variant", VARIANTS)
 def test_backends_bit_identical(variant):
     for seed in SEEDS:
         _replay(variant, seed)
 
 
+@pytest.mark.compiled_lowering
 @pytest.mark.parametrize("variant", VIRT_VARIANTS)
 def test_backends_bit_identical_with_segment_churn(variant):
     """Small-chunk config: the va/vl segment walk grows and shrinks
@@ -150,17 +170,20 @@ def test_backends_bit_identical_long_traces(variant):
 from repro.kernels.ops import count_pallas_calls as _count_pallas_calls
 
 
+@pytest.mark.compiled_lowering
+@pytest.mark.parametrize("lowering", LOWERINGS)
 @pytest.mark.parametrize("variant", VARIANTS)
-def test_single_pallas_call_per_txn(variant):
+def test_single_pallas_call_per_txn(variant, lowering):
     """backend="pallas": alloc and free each lower to exactly one
     pallas_call — the entire transaction (rank, grant, ring traffic,
-    bitmap claim, va/vl segment walk) is device-fused.  The jnp oracle
+    bitmap claim, va/vl segment walk) is device-fused — under BOTH the
+    whole-arena and the region-blocked lowering.  The jnp oracle
     lowers to zero."""
     sizes = jnp.full(N, 64, jnp.int32)
     mask = jnp.ones(N, bool)
     offs = jnp.full(N, -1, jnp.int32)
     for backend, want in (("pallas", 1), ("jnp", 0)):
-        o = Ouroboros(CFG, variant, backend)
+        o = Ouroboros(CFG, variant, backend, lowering)
         st = o.init()
         ja = jax.make_jaxpr(lambda s, z, m: o.alloc(s, z, m))(
             st, sizes, mask)
@@ -177,6 +200,25 @@ def test_single_pallas_call_per_txn(variant):
 def test_backend_validated():
     with pytest.raises(ValueError, match="backend"):
         Ouroboros(CFG, "page", backend="cuda")
+    with pytest.raises(ValueError, match="backend"):
+        # the dispatcher itself refuses typos too — nothing silently
+        # falls through to the jnp branch
+        from repro.core import transactions
+        o = Ouroboros(CFG, "page")
+        transactions.alloc(CFG, "page", "ring", o.init(),
+                           jnp.full(4, 64, jnp.int32),
+                           jnp.ones(4, bool), backend="palas")
+
+
+def test_lowering_validated():
+    with pytest.raises(ValueError, match="lowering"):
+        Ouroboros(CFG, "page", backend="pallas", lowering="bocked")
+    from repro.kernels.ops import resolve_lowering
+    with pytest.raises(ValueError, match="lowering"):
+        resolve_lowering("bocked")
+    assert resolve_lowering("whole") == "whole"
+    assert resolve_lowering("blocked") == "blocked"
+    assert resolve_lowering("auto") in ("whole", "blocked")
 
 
 def test_backends_share_init_state():
@@ -192,19 +234,22 @@ def test_backends_share_init_state():
     assert (np.asarray(offs2) >= 0).all()
 
 
+@pytest.mark.compiled_lowering
 @pytest.mark.parametrize("variant", ("page", "va_page", "vl_chunk"))
 def test_midstream_backend_switch_stays_on_oracle_trajectory(variant):
-    """Replaying a trace while hopping jnp→pallas→jnp after every op
-    lands bit-identically on the pure-jnp trajectory (the ouroboros.py
-    promise that shared init state lets a heap switch backends)."""
+    """Replaying a trace while hopping jnp→whole→blocked after every
+    op lands bit-identically on the pure-jnp trajectory (the
+    ouroboros.py promise that shared init state lets a heap switch
+    backends — now including the kernel lowering)."""
     oj = Ouroboros(CFG, variant, backend="jnp")
-    op = Ouroboros(CFG, variant, backend="pallas")
+    ow = Ouroboros(CFG, variant, backend="pallas", lowering="whole")
+    ob = Ouroboros(CFG, variant, backend="pallas", lowering="blocked")
     rng = np.random.default_rng(7)
     ref, mix = oj.init(), oj.init()  # distinct buffers: alloc donates
-    hop = [oj, op, oj, op]  # jnp→pallas→jnp→pallas…
+    hop = [oj, ow, ob, ow, ob]  # jnp→whole→blocked→whole→blocked…
     tagc = 0
     live = []
-    for step in range(6):
+    for step in range(len(hop) + 1):
         o = hop[step % len(hop)]
         if live and rng.random() < 0.4:
             k = min(len(live), N)

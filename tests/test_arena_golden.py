@@ -1,0 +1,86 @@
+"""Golden snapshot of the arena word layout AND the per-region blocked
+-lowering treatment.
+
+DESIGN.md §7 documents the offset map and §8 the region-blocking
+scheme; both are rendered from the live ``ArenaLayout`` (test_heap.py
+pins §7 prose to ``describe()``).  This test goes one step further and
+pins the full rendering — offsets, shapes, blocking policy, and VMEM
+block shape per region, for all six variants — to a checked-in golden
+file, so ANY layout drift (a reordered region, a changed block shape,
+a region silently promoted to a whole-VMEM load) fails loudly instead
+of silently breaking cross-lowering parity or corrupting live heaps on
+a version upgrade.
+
+To regenerate after an *intentional* layout change:
+
+    PYTHONPATH=src python -c "
+    from repro.core import HeapConfig, arena
+    cfg = HeapConfig(total_bytes=1 << 16, chunk_bytes=1 << 11,
+                     min_page_bytes=16)
+    print('\\n'.join(arena.layout(cfg, k, f).describe(blocks=True)
+                     for k in arena.KINDS
+                     for f in arena.QUEUE_FAMILIES))
+    " > tests/golden/arena_layout.txt
+
+and justify the diff in the PR.
+"""
+import pathlib
+
+import pytest
+
+from repro.core import HeapConfig
+from repro.core import arena
+
+CFG = HeapConfig(total_bytes=1 << 16, chunk_bytes=1 << 11,
+                 min_page_bytes=16)
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "arena_layout.txt"
+
+
+def _render() -> str:
+    return "\n".join(arena.layout(CFG, kind, family).describe(blocks=True)
+                     for kind in arena.KINDS
+                     for family in arena.QUEUE_FAMILIES) + "\n"
+
+
+def test_layout_and_block_shapes_match_golden():
+    want = GOLDEN.read_text()
+    got = _render()
+    assert got == want, (
+        "arena layout or region block shapes drifted from the golden "
+        "snapshot (tests/golden/arena_layout.txt).  If the change is "
+        "intentional, regenerate the golden file (see module "
+        "docstring) and call the drift out in the PR — live arenas "
+        "serialized under the old layout will NOT survive it.")
+
+
+@pytest.mark.parametrize("kind", arena.KINDS)
+@pytest.mark.parametrize("family", arena.QUEUE_FAMILIES)
+def test_block_shapes_consistent_with_policy(kind, family):
+    """Structural invariants the blocked lowering relies on, config-
+    independent: row-blocked regions are 2-D with one-row blocks, hbm
+    regions never present a VMEM block, and untouched regions are
+    exactly the ones the transactions never write."""
+    lay = arena.layout(CFG, kind, family)
+    for r in lay.regions:
+        if r.blocking == "row":
+            assert len(r.shape) == 2 and r.block_shape == (1, r.shape[1])
+        elif r.blocking == "resident":
+            assert r.block_shape == r.shape
+        else:
+            assert r.block_shape is None
+    # the heap is written only by segment traffic; the pool only ever
+    # moves for virtualized queues or chunk claims
+    assert (lay.region("heap").blocking == "untouched") == \
+        (family == "ring")
+    assert (lay.region("pool_store").blocking == "untouched") == \
+        (family == "ring" and kind == "page")
+
+
+def test_split_join_roundtrip():
+    """split/join (the blocked wrapper's mem plumbing) is lossless."""
+    import jax.numpy as jnp
+    lay = arena.layout(CFG, "chunk", "vl")
+    mem = jnp.arange(lay.mem_words, dtype=jnp.int32)
+    parts = arena.split(lay, mem)
+    assert set(parts) == {r.name for r in lay.regions}
+    assert (arena.join(lay, parts) == mem).all()

@@ -134,6 +134,43 @@ def test_engine_roundtrip(rng):
     assert eng.stats["frees"] == eng.stats["allocs"]
 
 
+def test_engine_validates_allocator_knobs():
+    """A typo like alloc_backend="palas" must fail at construction
+    with the menu of choices — never silently behave like another
+    configuration (it previously surfaced, if at all, only from deep
+    inside allocator setup)."""
+    from repro.serve.engine import ServingEngine
+    with pytest.raises(ValueError, match="alloc_backend.*palas"):
+        ServingEngine(None, None, alloc_backend="palas")
+    with pytest.raises(ValueError, match="alloc_lowering.*bocked"):
+        ServingEngine(None, None, alloc_lowering="bocked")
+
+
+def test_engine_surfaces_active_lowering(rng):
+    """engine.stats reports the allocator backend and the RESOLVED
+    kernel lowering actually in use (whole|blocked for pallas, none
+    for jnp), so operators can tell which compiled story served a
+    request stream."""
+    from repro.serve.engine import ServingEngine
+    cfg = get_arch("qwen2-0.5b").smoke()
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(m, params, max_batch=2, max_seq=64,
+                        kv_dtype=jnp.float32, alloc_backend="pallas",
+                        alloc_lowering="blocked")
+    assert eng.stats["alloc_backend"] == "pallas"
+    assert eng.stats["alloc_lowering"] == "blocked"
+    eng.submit(rng.integers(2, cfg.vocab_size, 6), max_new_tokens=3)
+    done = eng.run_until_done(50)
+    assert len(done) == 1 and len(done[0].out_tokens) == 3
+    assert eng.stats["alloc_failures"] == 0
+    assert eng.stats["frees"] == eng.stats["allocs"] > 0
+
+    eng2 = ServingEngine(m, params, max_batch=2, max_seq=64,
+                         kv_dtype=jnp.float32, alloc_backend="jnp")
+    assert eng2.stats["alloc_lowering"] == "none"
+
+
 def test_engine_roundtrip_pallas_alloc_backend(rng):
     """The engine's bulk page grants/releases through the fused
     single-kernel arena transactions (alloc_backend="pallas") behave
