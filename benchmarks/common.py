@@ -28,7 +28,8 @@ BENCH_HEAP = HeapConfig(total_bytes=32 << 20, chunk_bytes=8 << 10,
 
 def bench_variant(variant: str, *, n_allocs: int, size_bytes: int,
                   iters: int = ITERS, cfg: HeapConfig = BENCH_HEAP,
-                  backend: str = "jnp", lowering: str = "auto"):
+                  backend: str = "jnp", lowering: str = "auto",
+                  num_shards: int = 1):
     """One paper-style measurement cell.  Returns dict with avg_all /
     avg_subsequent alloc+free µs and the data-integrity flag.
 
@@ -37,8 +38,12 @@ def bench_variant(variant: str, *, n_allocs: int, size_bytes: int,
     side by side — on CPU the Pallas path runs in interpret mode, so
     its timings are only meaningful on a TPU backend.  ``lowering``
     picks the Pallas kernel shape (whole-arena refs vs region-blocked;
-    kernels/ops.resolve_lowering)."""
-    ouro = Ouroboros(cfg, variant, backend, lowering)
+    kernels/ops.resolve_lowering).  ``num_shards`` runs the cell on the
+    sharded multi-arena allocator (core/shards.py): hashed home-shard
+    routing, full overflow walk — the scaling axis of the shard
+    sweep."""
+    ouro = Ouroboros(cfg, variant, backend, lowering,
+                     num_shards=num_shards)
     state = ouro.init()
     jax.block_until_ready(state)
     sizes = jnp.full(n_allocs, size_bytes, jnp.int32)
@@ -69,6 +74,7 @@ def bench_variant(variant: str, *, n_allocs: int, size_bytes: int,
         "variant": variant, "backend": backend,
         "lowering": (resolve_lowering(lowering) if backend == "pallas"
                      else "none"),
+        "num_shards": num_shards,
         "n": n_allocs, "size": size_bytes,
         "alloc_us_all": us(alloc_t),
         "alloc_us_subsequent": us(alloc_t[1:]),
@@ -85,7 +91,8 @@ THREAD_SWEEP_CHUNK = (32, 128, 512, 1024, 2048)    # chunk walk is O(N/ppc)
 
 
 def figure_rows(variant: str, quick: bool = False,
-                backend: str = "jnp", lowering: str = "auto"):
+                backend: str = "jnp", lowering: str = "auto",
+                num_shards: int = 1):
     """The two sweeps of one paper figure (size @1024 allocs; threads
     @1000 B), as the paper's figs. 1-6 do per allocator."""
     sizes = SIZE_SWEEP[::3] if quick else SIZE_SWEEP
@@ -96,25 +103,29 @@ def figure_rows(variant: str, quick: bool = False,
     for s in sizes:
         rows.append(bench_variant(variant, n_allocs=1024 if not quick
                                   else 256, size_bytes=s,
-                                  backend=backend, lowering=lowering))
+                                  backend=backend, lowering=lowering,
+                                  num_shards=num_shards))
     for n in threads:
         rows.append(bench_variant(variant, n_allocs=n, size_bytes=1000,
-                                  backend=backend, lowering=lowering))
+                                  backend=backend, lowering=lowering,
+                                  num_shards=num_shards))
     return rows
 
 
 def pallas_calls_per_txn(variant: str, backend: str = "pallas",
-                         lowering: str = "auto"):
+                         lowering: str = "auto", num_shards: int = 1):
     """(alloc, free) pallas_call launch counts for one bulk transaction,
     read off the jaxpr — the proof of single-kernel fusion the arena
-    refactor claims (1/1 for "pallas" under BOTH lowerings, 0/0 for
+    refactor claims (1/1 for "pallas" under BOTH lowerings AND any
+    ``num_shards`` — the sharded schedule rides the grid — 0/0 for
     "jnp").  Uses a small heap: the count is layout-independent and
     tracing stays cheap."""
     from repro.kernels.ops import count_pallas_calls as count
 
     cfg = HeapConfig(total_bytes=1 << 16, chunk_bytes=1 << 11,
                      min_page_bytes=16)
-    ouro = Ouroboros(cfg, variant, backend, lowering)
+    ouro = Ouroboros(cfg, variant, backend, lowering,
+                     num_shards=num_shards)
     st = ouro.init()
     sizes = jnp.full(16, 64, jnp.int32)
     mask = jnp.ones(16, bool)
@@ -144,6 +155,39 @@ def alloc_comparison_cell(variant: str, *, quick: bool = False,
             "alloc_us_subsequent": r["alloc_us_subsequent"],
             "free_us_all": r["free_us_all"],
             "free_us_subsequent": r["free_us_subsequent"],
+            "data_ok": r["data_ok"],
+        }
+    return out
+
+
+SHARD_SWEEP = (1, 2, 4)
+
+
+def shard_scaling_cell(variant: str, *, quick: bool = False,
+                       backend: str = "jnp", lowering: str = "auto"):
+    """Throughput vs num_shards for one variant — the horizontal-
+    scaling record appended to BENCH_alloc.json (DESIGN.md §9).  Same
+    heap and request stream at every shard count, so the axis isolates
+    the sharded transaction schedule.  CPU caveat: the jnp path runs
+    the serial (attempt, shard) replay host-side, so CPU cells GROW
+    with num_shards — they are a correctness/trajectory record; the
+    scaling result itself is a TPU measurement (gridded kernels)."""
+    n = 128 if quick else 512
+    cfg = HeapConfig(total_bytes=4 << 20, chunk_bytes=8 << 10,
+                     min_page_bytes=16)
+    out = {}
+    for num_shards in SHARD_SWEEP:
+        r = bench_variant(variant, n_allocs=n, size_bytes=256,
+                          iters=4 if quick else ITERS, cfg=cfg,
+                          backend=backend, lowering=lowering,
+                          num_shards=num_shards)
+        out[str(num_shards)] = {
+            "backend": backend,
+            "lowering": r["lowering"],
+            "alloc_us_subsequent": r["alloc_us_subsequent"],
+            "free_us_subsequent": r["free_us_subsequent"],
+            "allocs_per_s_subsequent":
+                1e6 * n / max(r["alloc_us_subsequent"], 1e-9),
             "data_ok": r["data_ok"],
         }
     return out

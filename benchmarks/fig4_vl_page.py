@@ -8,6 +8,6 @@ VARIANT = "vl_page"
 
 
 def run(quick: bool = False, backend: str = "jnp",
-        lowering: str = "auto"):
+        lowering: str = "auto", num_shards: int = 1):
     return figure_rows(VARIANT, quick=quick, backend=backend,
-                       lowering=lowering)
+                       lowering=lowering, num_shards=num_shards)

@@ -19,9 +19,15 @@ kernel shape the cells ran (``--lowering``; auto = whole on CPU
 interpret, blocked on TPU) — so perf rows stay comparable across the
 two compiled stories.
 
+``--num-shards`` runs the figure cells on the sharded multi-arena
+allocator (core/shards.py); independently of it, every ``--alloc-json``
+record now also appends a ``shard_sweep`` — throughput vs num_shards
+(1, 2, 4) per swept variant — so BENCH_alloc.json tracks horizontal
+scaling alongside the jnp-vs-pallas trajectory.
+
     PYTHONPATH=src python -m benchmarks.run [--quick] [--fig fig1_page]
         [--backend jnp|pallas|both] [--lowering auto|whole|blocked]
-        [--alloc-json BENCH_alloc.json]
+        [--num-shards N] [--alloc-json BENCH_alloc.json]
 """
 from __future__ import annotations
 
@@ -49,6 +55,10 @@ def main(argv=None) -> None:
                     help="Pallas kernel lowering: whole-arena refs vs "
                          "the region-blocked compiled lowering "
                          "(DESIGN.md §8); auto picks per platform")
+    ap.add_argument("--num-shards", type=int, default=1, metavar="N",
+                    help="run the figure cells on the sharded "
+                         "multi-arena allocator (core/shards.py, "
+                         "DESIGN.md §9)")
     ap.add_argument("--alloc-json", default=None, metavar="PATH",
                     help="also write per-variant jnp-vs-pallas "
                          "avg_all/avg_subsequent to PATH")
@@ -62,9 +72,11 @@ def main(argv=None) -> None:
         mod = importlib.import_module(f"benchmarks.{fig}")
         for backend in backends:
             for row in mod.run(quick=args.quick, backend=backend,
-                               lowering=args.lowering):
+                               lowering=args.lowering,
+                               num_shards=args.num_shards):
                 name = (f"{fig}/{row['variant']}/{row['backend']}"
-                        f"/{row['lowering']}/n{row['n']}/s{row['size']}")
+                        f"/{row['lowering']}/sh{row['num_shards']}"
+                        f"/n{row['n']}/s{row['size']}")
                 derived = (f"alloc_all={row['alloc_us_all']:.0f}us "
                            f"alloc_sub={row['alloc_us_subsequent']:.0f}us "
                            f"free_sub={row['free_us_subsequent']:.0f}us "
@@ -75,8 +87,9 @@ def main(argv=None) -> None:
 
     if args.alloc_json:
         import jax
-        from benchmarks.common import (alloc_comparison_cell,
-                                       pallas_calls_per_txn)
+        from benchmarks.common import (SHARD_SWEEP, alloc_comparison_cell,
+                                       pallas_calls_per_txn,
+                                       shard_scaling_cell)
         from repro.core import VARIANTS
 
         from repro.kernels.ops import resolve_lowering
@@ -88,6 +101,27 @@ def main(argv=None) -> None:
             launches[v] = {"alloc": a, "free": f}
             print(f"launches_per_txn,{v}/pallas/{lowering},"
                   f"alloc={a} free={f}", flush=True)
+        # the one-kernel contract holds for the sharded allocator too:
+        # the (attempt, shard) schedule rides the grid, not extra
+        # launches (DESIGN.md §9)
+        for v in ("page", "vl_chunk"):
+            a, f = pallas_calls_per_txn(v, "pallas", args.lowering,
+                                        num_shards=4)
+            launches[f"{v}/shards4"] = {"alloc": a, "free": f}
+            print(f"launches_per_txn,{v}/pallas/{lowering}/shards4,"
+                  f"alloc={a} free={f}", flush=True)
+
+        # throughput vs num_shards: the horizontal-scaling record
+        # (jnp column — the CPU perf signal; see README)
+        shard_sweep = {v: shard_scaling_cell(v, quick=args.quick)
+                       for v in ("page", "vl_chunk")}
+        for v, cells in shard_sweep.items():
+            for S in SHARD_SWEEP:
+                c = cells[str(S)]
+                print(f"shard_sweep,{v}/jnp/shards{S},"
+                      f"alloc_sub={c['alloc_us_subsequent']:.0f}us "
+                      f"allocs_per_s={c['allocs_per_s_subsequent']:.0f}",
+                      flush=True)
 
         # pallas timings on a non-TPU platform are interpret-mode and
         # only the jnp column is a perf signal there; record which —
@@ -99,6 +133,7 @@ def main(argv=None) -> None:
             "quick": bool(args.quick),
             "lowering": lowering,
             "launches_per_txn": launches,
+            "shard_sweep": shard_sweep,
             "variants": {v: alloc_comparison_cell(v, quick=args.quick,
                                                   lowering=args.lowering)
                          for v in VARIANTS},

@@ -48,7 +48,7 @@ for variant in VARIANTS:
     print(f"{variant:10s} small granted {small_ok:4d}/2048, "
           f"4KiB after churn {big_ok:2d}/32")
 
-print("\n== backend parity: fused Pallas transaction vs jnp oracle ==")
+print("\n== backend parity: fused Pallas lowerings vs jnp oracle ==")
 small = HeapConfig(total_bytes=1 << 16, chunk_bytes=1 << 11,
                    min_page_bytes=16)
 sizes = jnp.asarray(rng.choice([16, 64, 256, 1024], 16), jnp.int32)
@@ -56,7 +56,29 @@ ones = jnp.ones(16, bool)
 for variant in ("page", "vl_chunk"):
     st_j, offs_j = (lambda o: o.alloc(o.init(), sizes, ones))(
         Ouroboros(small, variant, backend="jnp"))
-    st_p, offs_p = (lambda o: o.alloc(o.init(), sizes, ones))(
-        Ouroboros(small, variant, backend="pallas"))
-    same = bool((np.asarray(offs_j) == np.asarray(offs_p)).all())
-    print(f"{variant:10s} jnp == pallas offsets: {same}")
+    # both kernel shapes: whole-arena refs and the region-blocked
+    # compiled lowering (DESIGN.md §8) — bit-identical by contract
+    for lowering in ("whole", "blocked"):
+        st_p, offs_p = (lambda o: o.alloc(o.init(), sizes, ones))(
+            Ouroboros(small, variant, backend="pallas",
+                      lowering=lowering))
+        same = bool((np.asarray(offs_j) == np.asarray(offs_p)).all())
+        print(f"{variant:10s} jnp == pallas/{lowering:7s} offsets: {same}")
+
+print("\n== sharding: overflow walk rescues an exhausted home shard ==")
+# 4 shards; every lane homed on shard 0.  With the walk disabled the
+# drain stops at one shard's capacity — with it, neighbors serve the
+# overflow (DESIGN.md §9).
+shard_cfg = HeapConfig(total_bytes=1 << 14, chunk_bytes=1 << 10,
+                       min_page_bytes=64)
+burst = jnp.full(64, 64, jnp.int32)       # more than one shard holds
+ones64 = jnp.ones(64, bool)
+for walk, label in ((0, "overflow_walk=0"), (None, "full walk")):
+    ouro = Ouroboros(shard_cfg, "page", num_shards=4,
+                     overflow_walk=walk)
+    st, offs = ouro.alloc(ouro.init(), burst, ones64, shard_hint=0)
+    offs = np.asarray(offs)
+    per_shard = [int(((offs >= 0) & (offs // ouro.layout.shard_words
+                                     == s)).sum()) for s in range(4)]
+    print(f"{label:15s} granted {int((offs >= 0).sum()):2d}/64, "
+          f"per shard {per_shard}")

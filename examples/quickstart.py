@@ -1,4 +1,9 @@
-"""Quickstart: the Ouroboros allocator public API in 40 lines.
+"""Quickstart: the Ouroboros allocator public API in 60 lines.
+
+Covers the current knobs: ``backend`` (jnp reference vs fused Pallas
+kernels), ``lowering`` (whole-arena refs vs the region-blocked
+compiled lowering, DESIGN.md §8), and ``num_shards`` (the sharded
+multi-arena allocator with overflow routing, DESIGN.md §9).
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -12,18 +17,24 @@ from repro.core import HeapConfig, Ouroboros, VARIANTS
 cfg = HeapConfig(total_bytes=8 << 20, chunk_bytes=8 << 10,
                  min_page_bytes=16)
 
+sizes = jnp.asarray([16, 100, 1000, 4000, 8000] * 20, jnp.int32)
+mask = jnp.ones(sizes.shape[0], bool)
+tags = jnp.arange(sizes.shape[0], dtype=jnp.int32)
+
+print("== six variants, jnp reference backend ==")
 for variant in VARIANTS:
-    ouro = Ouroboros(cfg, variant)
+    # backend="pallas" runs each whole transaction as ONE fused
+    # kernel; lowering="blocked"|"whole" picks the kernel shape
+    # ("auto": blocked on TPU, whole on CPU interpret).  All paths are
+    # bit-identical, so the demo uses the fast-on-CPU default.
+    ouro = Ouroboros(cfg, variant, backend="jnp", lowering="auto")
     state = ouro.init()
 
     # Bulk allocation: one device transaction serves every lane
     # (the TPU analogue of the paper's warp-aggregated allocation).
-    sizes = jnp.asarray([16, 100, 1000, 4000, 8000] * 20, jnp.int32)
-    mask = jnp.ones(sizes.shape[0], bool)
     state, offsets = ouro.alloc(state, sizes, mask)
 
     # Write a tag into every allocation, verify, then free.
-    tags = jnp.arange(sizes.shape[0], dtype=jnp.int32)
     state = ouro.write_pattern(state, offsets, sizes, tags)
     ok = np.asarray(ouro.check_pattern(state, offsets, sizes, tags))
     state = ouro.free(state, offsets, sizes, mask)
@@ -31,3 +42,32 @@ for variant in VARIANTS:
     granted = int((np.asarray(offsets) >= 0).sum())
     print(f"{variant:10s} granted {granted}/{sizes.shape[0]} "
           f"data_ok={bool(ok[np.asarray(offsets) >= 0].all())}")
+
+print("\n== sharded: 4 independent arenas, overflow routing ==")
+# A smaller heap keeps the demo snappy: the sharded jnp path unrolls
+# one per-shard transaction per (attempt, shard) step, so trace size
+# scales with num_shards * (overflow_walk + 1).
+shard_cfg = HeapConfig(total_bytes=1 << 20, chunk_bytes=1 << 12,
+                       min_page_bytes=16)
+ouro = Ouroboros(shard_cfg, "va_page", num_shards=4,
+                 overflow_walk=1)                  # DESIGN.md §9
+state = ouro.init()
+Ws = ouro.layout.shard_words
+
+# default routing: hashed home shards spread the wavefront
+state, offs = ouro.alloc(state, sizes, mask)
+homes = np.asarray(offs) // Ws
+print(f"hashed routing: grants per shard = "
+      f"{[int((homes == s).sum()) for s in range(4)]}")
+state = ouro.free(state, offs, sizes, mask)
+
+# caller routing: shard_hint pins the wavefront's home (per-lane
+# arrays work too — the serving engine homes each sequence this way).
+# When the home shard runs out, the overflow walk (here 1 neighbor)
+# serves the remainder from shard 2 instead of failing the lanes.
+state, offs = ouro.alloc(state, sizes, mask, shard_hint=1)
+homes = np.asarray(offs) // Ws
+print(f"shard_hint=1:   grants per shard = "
+      f"{[int((homes == s).sum()) for s in range(4)]}  "
+      f"(spill past shard 1 = the overflow walk)")
+assert set(homes[np.asarray(offs) >= 0].tolist()) <= {1, 2}

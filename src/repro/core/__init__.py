@@ -6,6 +6,7 @@ here — see DESIGN.md §1-2 for the GPU→TPU mechanism mapping.
 from repro.core.arena import Arena, ArenaLayout
 from repro.core.heap import HeapConfig
 from repro.core.ouroboros import BACKENDS, LOWERINGS, Ouroboros, VARIANTS
+from repro.core.shards import ShardedArena, ShardLayout
 
 __all__ = ["Arena", "ArenaLayout", "BACKENDS", "HeapConfig", "LOWERINGS",
-           "Ouroboros", "VARIANTS"]
+           "Ouroboros", "ShardLayout", "ShardedArena", "VARIANTS"]

@@ -23,6 +23,22 @@ round trip, and the jnp oracle operates on the *same* layout
 
 The offset table is documented in DESIGN.md §7; ``describe()`` renders
 it from the live layout so the doc can never drift silently.
+
+Layouts are pure host math — cheap to inspect:
+
+>>> from repro.core import HeapConfig
+>>> from repro.core import arena
+>>> cfg = HeapConfig(total_bytes=1 << 16, chunk_bytes=1 << 11,
+...                  min_page_bytes=16)
+>>> lay = arena.layout(cfg, "page", "ring")
+>>> lay.region("heap").offset, lay.region("heap").words
+(0, 16384)
+>>> [r.name for r in lay.regions]
+['heap', 'pool_store', 'queue_store']
+>>> lay.ctl_words == 4 * cfg.num_classes + 2
+True
+>>> print(lay.describe().splitlines()[1])
+  mem[0:16384]  heap (16384,)
 """
 from __future__ import annotations
 

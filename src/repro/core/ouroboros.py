@@ -29,16 +29,24 @@ including the va/vl segment walk — as ONE fused ``pallas_call``
 are bit-identical — the jnp path is the oracle for
 tests/test_alloc_txn_parity.py — and share ``init`` state, so a heap
 can switch backends mid-stream (also asserted there).
+
+With ``num_shards > 1`` the heap is partitioned into that many
+independent arenas (core/shards.py, DESIGN.md §9): state becomes a
+``shards.ShardedArena`` of stacked per-shard slabs, requests route to
+a home shard (hashed, or caller-hinted) with a bounded overflow walk
+across neighbors on exhaustion, and each transaction is STILL one
+``pallas_call`` — the kernels grid the (attempt, shard) schedule.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import arena, transactions
+from repro.core import arena, shards, transactions
 from repro.core.heap import HeapConfig
 
 VARIANTS = ("page", "chunk", "va_page", "vl_page", "va_chunk", "vl_chunk")
@@ -57,17 +65,54 @@ def _split(variant: str):
 
 @dataclasses.dataclass(frozen=True)
 class Ouroboros:
-    """Facade binding a HeapConfig to one of the six variants, a
-    transaction backend (jnp reference path or fused Pallas kernels),
-    and — for the Pallas backend — a kernel ``lowering``: ``"whole"``
-    (full-arena refs), ``"blocked"`` (the region-blocked compiled
-    lowering, DESIGN.md §8), or ``"auto"`` (kernels/ops picks per
-    platform / REPRO_ALLOC_LOWERING).  Both lowerings are bit-identical
-    to the jnp oracle and to each other (tests/test_alloc_txn_parity)."""
+    """Facade binding a HeapConfig to one of the six paper variants.
+
+    ``backend`` picks the transaction implementation (jnp reference
+    path vs fused Pallas kernels) and — for the Pallas backend —
+    ``lowering`` the kernel shape: ``"whole"`` (full-arena refs),
+    ``"blocked"`` (the region-blocked compiled lowering, DESIGN.md
+    §8), or ``"auto"`` (kernels/ops picks per platform /
+    REPRO_ALLOC_LOWERING).  Both lowerings are bit-identical to the
+    jnp oracle and to each other (tests/test_alloc_txn_parity).
+
+    ``num_shards > 1`` partitions the heap into independent arenas
+    with overflow routing (core/shards.py, DESIGN.md §9);
+    ``overflow_walk`` bounds how many neighbor shards a request may
+    retry after its home shard fails (``None`` = all of them).
+
+    Basic usage (every returned offset is a heap word offset; −1
+    marks a failed lane, the GPU original's nullptr):
+
+    >>> import jax.numpy as jnp
+    >>> from repro.core import HeapConfig, Ouroboros
+    >>> cfg = HeapConfig(total_bytes=1 << 16, chunk_bytes=1 << 11,
+    ...                  min_page_bytes=16)
+    >>> ouro = Ouroboros(cfg, "page")
+    >>> state = ouro.init()
+    >>> sizes = jnp.full(4, 64, jnp.int32)      # four 64 B requests
+    >>> mask = jnp.ones(4, bool)
+    >>> state, offs = ouro.alloc(state, sizes, mask)
+    >>> bool((offs >= 0).all())                 # all granted
+    True
+    >>> sorted({int(o) % 16 for o in offs})     # 64 B = 16-word aligned
+    [0]
+    >>> state = ouro.free(state, offs, sizes, mask)
+
+    Sharded, with a caller-pinned home shard (the offset's owning
+    shard is its global offset divided by the per-shard heap words):
+
+    >>> ouro4 = Ouroboros(cfg, "page", num_shards=4)
+    >>> st = ouro4.init()
+    >>> st, offs = ouro4.alloc(st, sizes, mask, shard_hint=2)
+    >>> [int(o) // ouro4.layout.shard_words for o in offs]
+    [2, 2, 2, 2]
+    """
     cfg: HeapConfig
     variant: str
     backend: str = "jnp"
     lowering: str = "auto"
+    num_shards: int = 1
+    overflow_walk: Optional[int] = None
 
     def __post_init__(self):
         _split(self.variant)
@@ -78,6 +123,15 @@ class Ouroboros:
             raise ValueError(
                 f"unknown lowering {self.lowering!r}; pick from "
                 f"{LOWERINGS}")
+        if self.num_shards != 1:
+            # validates divisibility + per-shard layout viability early
+            shards.layout(self.cfg, self.num_shards, self.kind,
+                          self.family)
+            shards.resolve_walk(self.num_shards, self.overflow_walk)
+        elif self.overflow_walk is not None:
+            # an ignored knob is a lie: without shards there is
+            # nothing to walk, so say so (symmetric with shard_hint)
+            raise ValueError("overflow_walk requires num_shards > 1")
 
     @property
     def kind(self) -> str:
@@ -88,32 +142,140 @@ class Ouroboros:
         return _split(self.variant)[1]
 
     @property
-    def layout(self) -> arena.ArenaLayout:
-        """The static word layout of this variant's arena."""
-        return arena.layout(self.cfg, self.kind, self.family)
+    def walk(self) -> int:
+        """Resolved overflow-walk length (0 when unsharded)."""
+        if self.num_shards == 1:
+            return 0
+        return shards.resolve_walk(self.num_shards, self.overflow_walk)
 
-    def init(self) -> arena.Arena:
-        return transactions.init(self.cfg, self.kind, self.family)
+    @property
+    def layout(self):
+        """The static word layout: an ``arena.ArenaLayout`` for a
+        single arena, a ``shards.ShardLayout`` when sharded."""
+        if self.num_shards == 1:
+            return arena.layout(self.cfg, self.kind, self.family)
+        return shards.layout(self.cfg, self.num_shards, self.kind,
+                             self.family)
+
+    def init(self):
+        """Fresh allocator state (``arena.Arena``, or
+        ``shards.ShardedArena`` when ``num_shards > 1``).  Backend-,
+        lowering-, and routing-free: a live heap can switch any of
+        them mid-stream."""
+        return transactions.init(self.cfg, self.kind, self.family,
+                                 self.num_shards)
+
+    # -- transactions -------------------------------------------------------
+
+    def alloc(self, state, sizes_bytes, mask, shard_hint=None):
+        """One bulk allocation transaction.
+
+        Returns ``(state', word_offsets)``; offset −1 marks a failed
+        lane (over-large size / exhausted inventory).  ``shard_hint``
+        (sharded only): ``None`` routes each lane by hash, an int or a
+        per-lane int32 array pins home shards — a static int with
+        ``overflow_walk=0`` additionally takes the pinned fast path,
+        where the other shards bypass the kernel entirely (the shard
+        analogue of ``Region.blocking == "untouched"``)."""
+        if self.num_shards == 1:
+            if shard_hint is not None:
+                raise ValueError("shard_hint requires num_shards > 1")
+            return self._alloc(state, sizes_bytes, mask)
+        pinned = shards.static_hint(shard_hint)
+        if pinned is not None and self.walk == 0:
+            return self._alloc_pinned(state, sizes_bytes, mask,
+                                      pinned % self.num_shards)
+        home = shards.home_shards(sizes_bytes.shape[0], self.num_shards,
+                                  shard_hint)
+        return self._alloc_sharded(state, sizes_bytes, mask, home)
+
+    def free(self, state, offsets_words, sizes_bytes, mask,
+             shard_hint=None):
+        """One bulk free transaction (offsets as returned by
+        ``alloc``; sharded offsets are global, each owned by exactly
+        one shard).  A static int ``shard_hint`` with
+        ``overflow_walk=0`` frees on that shard alone (lanes whose
+        offsets live elsewhere are dropped — the pinned contract)."""
+        if self.num_shards == 1:
+            if shard_hint is not None:
+                raise ValueError("shard_hint requires num_shards > 1")
+            return self._free(state, offsets_words, sizes_bytes, mask)
+        pinned = shards.static_hint(shard_hint)
+        if pinned is not None and self.walk == 0:
+            return self._free_pinned(state, offsets_words, sizes_bytes,
+                                     mask, pinned % self.num_shards)
+        return self._free_sharded(state, offsets_words, sizes_bytes,
+                                  mask)
 
     @functools.partial(jax.jit, static_argnums=0, donate_argnums=1)
-    def alloc(self, state, sizes_bytes, mask):
+    def _alloc(self, state, sizes_bytes, mask):
         return transactions.alloc(self.cfg, self.kind, self.family,
                                   state, sizes_bytes, mask, self.backend,
                                   self.lowering)
 
     @functools.partial(jax.jit, static_argnums=0, donate_argnums=1)
-    def free(self, state, offsets_words, sizes_bytes, mask):
+    def _free(self, state, offsets_words, sizes_bytes, mask):
         return transactions.free(self.cfg, self.kind, self.family, state,
                                  offsets_words, sizes_bytes, mask,
                                  self.backend, self.lowering)
 
-    def compact(self, state):
-        return transactions.compact(self.cfg, self.kind, self.family,
-                                    state)
+    @functools.partial(jax.jit, static_argnums=0, donate_argnums=1)
+    def _alloc_sharded(self, state, sizes_bytes, mask, home):
+        return transactions.sharded_alloc(
+            self.cfg, self.num_shards, self.kind, self.family, state,
+            sizes_bytes, mask, home, self.walk, self.backend,
+            self.lowering)
 
-    def heap(self, state: arena.Arena):
-        """The heap proper (the paper's word array) inside the arena."""
-        return arena.heap_of(self.layout, state)
+    @functools.partial(jax.jit, static_argnums=0, donate_argnums=1)
+    def _free_sharded(self, state, offsets_words, sizes_bytes, mask):
+        return transactions.sharded_free(
+            self.cfg, self.num_shards, self.kind, self.family, state,
+            offsets_words, sizes_bytes, mask, self.backend,
+            self.lowering)
+
+    @functools.partial(jax.jit, static_argnums=(0, 4), donate_argnums=1)
+    def _alloc_pinned(self, state, sizes_bytes, mask, s):
+        """Static-hint fast path: the transaction runs the SINGLE-arena
+        kernel on shard ``s``'s slab; the other shards never enter the
+        kernel (static slices around it)."""
+        scfg = shards.shard_config(self.cfg, self.num_shards)
+        sub, local = transactions.alloc(
+            scfg, self.kind, self.family, shards.take_shard(state, s),
+            sizes_bytes, mask, self.backend, self.lowering)
+        offs = jnp.where(local >= 0, s * scfg.total_words + local, local)
+        return shards.with_shard(state, s, sub), offs
+
+    @functools.partial(jax.jit, static_argnums=(0, 5), donate_argnums=1)
+    def _free_pinned(self, state, offsets_words, sizes_bytes, mask, s):
+        scfg = shards.shard_config(self.cfg, self.num_shards)
+        Ws = scfg.total_words
+        sel = mask & (offsets_words >= s * Ws) \
+            & (offsets_words < (s + 1) * Ws)
+        local = jnp.where(sel, offsets_words - s * Ws, -1)
+        sub = transactions.free(
+            scfg, self.kind, self.family, shards.take_shard(state, s),
+            local, sizes_bytes, sel, self.backend, self.lowering)
+        return shards.with_shard(state, s, sub)
+
+    def compact(self, state):
+        if self.num_shards == 1:
+            return transactions.compact(self.cfg, self.kind, self.family,
+                                        state)
+        return transactions.sharded_compact(
+            self.cfg, self.num_shards, self.kind, self.family, state)
+
+    def heap(self, state):
+        """The heap proper (the paper's word array): for sharded state
+        the per-shard heap regions concatenated in shard order, so
+        GLOBAL word offsets index it directly."""
+        if self.num_shards == 1:
+            return arena.heap_of(self.layout, state)
+        return shards.heap_of(self.layout, state)
+
+    def _with_heap(self, state, heap):
+        if self.num_shards == 1:
+            return arena.with_heap(self.layout, state, heap)
+        return shards.with_heap(self.layout, state, heap)
 
     # -- benchmark data path (paper §3: "writing some data, checking that
     #    the data is correct when read back") -------------------------------
@@ -121,7 +283,7 @@ class Ouroboros:
     def write_pattern(self, state, offsets_words, sizes_bytes, tag):
         heap = write_words(self.cfg, self.heap(state), offsets_words,
                            sizes_bytes, tag)
-        return arena.with_heap(self.layout, state, heap)
+        return self._with_heap(state, heap)
 
     @functools.partial(jax.jit, static_argnums=0)
     def check_pattern(self, state, offsets_words, sizes_bytes, tag):

@@ -1,0 +1,263 @@
+"""Sharded multi-arena allocator: N independent arenas + overflow routing.
+
+The single device-resident arena (core/arena.py) funnels every request
+through one set of rings, directories, and bitmaps.  That is the right
+shape for one kernel, but the paper's headline claim is throughput
+under *massive concurrency* — and the serving north star ("heavy
+traffic from millions of users", ROADMAP) needs the allocator to scale
+horizontally.  This module partitions the heap into ``num_shards``
+independent arenas:
+
+    ``ShardedArena.mem``  (S, shard_mem_words) — shard ``s``'s word
+                          image is row ``s``, laid out by the SAME
+                          :class:`~repro.core.arena.ArenaLayout` as a
+                          single arena of ``total_bytes / S`` (so
+                          ``arena.split``/``join`` and every region
+                          offset work per shard unchanged);
+    ``ShardedArena.ctl``  (S, shard_ctl_words) — one control block per
+                          shard.
+
+Routing (DESIGN.md §9): every request lane gets a **home shard** —
+``hash(lane) % S`` by default, or an explicit ``shard_hint`` from the
+caller (the KV cache pins each sequence's pages this way) — and a
+transaction serves lanes **attempt-major, shard-minor**: attempt 0
+visits each shard with its home lanes; lanes a shard could not serve
+retry on ``home + 1, home + 2, …`` (mod S) up to a bounded **overflow
+walk** (default: all S−1 neighbors, so a request only fails once every
+shard is exhausted).  Offsets returned to callers are GLOBAL heap word
+offsets: ``global = shard * shard_words + local``.
+
+The replay order is the correctness contract: the jnp oracle
+(``transactions.sharded_alloc_math``) literally replays the wavefront
+through the per-shard single-arena math in that order, and both Pallas
+lowerings grid the SAME schedule into one ``pallas_call``
+(kernels/alloc_txn.sharded_* and alloc_txn_blocked.sharded_*), so all
+implementations are bit-identical to a serial single-shard oracle
+replay (tests/test_alloc_txn_parity.py).
+
+With a *static* ``shard_hint`` and ``overflow_walk=0`` the transaction
+touches exactly one shard, and the other S−1 rows bypass the kernel
+entirely (static slices around the single-arena kernel) — the shard
+analogue of ``Region.blocking == "untouched"``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import numbers
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import arena
+from repro.core.heap import HeapConfig
+
+# Knuth's multiplicative hash constant (2^32 / golden ratio): cheap,
+# well-mixing lane -> home-shard map that both the oracle and the
+# kernels receive as a precomputed lane vector.
+_HASH_MULT = 2654435761
+
+
+class ShardedArena(NamedTuple):
+    """Stacked per-shard allocator state (see module docstring).
+
+    >>> from repro.core import HeapConfig, shards
+    >>> cfg = HeapConfig(total_bytes=1 << 16, chunk_bytes=1 << 11,
+    ...                  min_page_bytes=16)
+    >>> st = shards.init(cfg, 4, "page", "ring")
+    >>> st.num_shards, st.mem.ndim, st.ctl.ndim
+    (4, 2, 2)
+    """
+    mem: Any  # (num_shards, shard mem_words) int32
+    ctl: Any  # (num_shards, shard ctl_words) int32
+
+    @property
+    def num_shards(self) -> int:
+        return self.mem.shape[0]
+
+
+def shard_config(cfg: HeapConfig, num_shards: int) -> HeapConfig:
+    """The per-shard HeapConfig: same chunk/page geometry, 1/S of the
+    bytes.  Shard boundaries are chunk boundaries by construction."""
+    if num_shards < 1:
+        raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+    if cfg.num_chunks % num_shards:
+        raise ValueError(
+            f"num_shards={num_shards} must divide num_chunks="
+            f"{cfg.num_chunks} (shards split the heap chunk-wise)")
+    return dataclasses.replace(
+        cfg, total_bytes=cfg.total_bytes // num_shards)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardLayout:
+    """Static layout of a sharded arena: ``num_shards`` copies of one
+    per-shard :class:`~repro.core.arena.ArenaLayout` (``self.shard``),
+    plus the global-offset convention.  DESIGN.md §9 is rendered from
+    ``describe()`` (tests/golden/shard_layout.txt pins it)."""
+    cfg: HeapConfig            # the GLOBAL heap config
+    num_shards: int
+    kind: str
+    family: str
+
+    @property
+    def shard_cfg(self) -> HeapConfig:
+        return shard_config(self.cfg, self.num_shards)
+
+    @property
+    def shard(self) -> arena.ArenaLayout:
+        """The per-shard arena layout (every offset is shard-local)."""
+        return arena.layout(self.shard_cfg, self.kind, self.family)
+
+    @property
+    def shard_words(self) -> int:
+        """Heap words per shard: global offset = s·shard_words + local."""
+        return self.shard_cfg.total_words
+
+    @property
+    def mem_words(self) -> int:
+        return self.shard.mem_words
+
+    @property
+    def ctl_words(self) -> int:
+        return self.shard.ctl_words
+
+    def describe(self, blocks: bool = False) -> str:
+        """Human-readable shard table + the per-shard §7/§8 rendering
+        (DESIGN.md §9 embeds this; tests pin doc and code together)."""
+        S = self.num_shards
+        lines = [
+            f"sharded arena(kind={self.kind}, family={self.family}, "
+            f"num_shards={S}): mem {S}x{self.mem_words} words, "
+            f"ctl {S}x{self.ctl_words} words",
+            f"  global heap offset = shard * {self.shard_words} + local; "
+            f"home = hash(lane) % {S} or shard_hint; overflow walk "
+            f"retries home+1..home+{S - 1} (mod {S})",
+        ]
+        lines += ["  " + ln
+                  for ln in self.shard.describe(blocks=blocks).splitlines()]
+        return "\n".join(lines)
+
+
+@functools.lru_cache(maxsize=None)
+def layout(cfg: HeapConfig, num_shards: int, kind: str,
+           family: str) -> ShardLayout:
+    shard_config(cfg, num_shards)  # validate divisibility early
+    arena.layout(shard_config(cfg, num_shards), kind, family)
+    return ShardLayout(cfg=cfg, num_shards=num_shards, kind=kind,
+                       family=family)
+
+
+def resolve_walk(num_shards: int, overflow_walk: Optional[int]) -> int:
+    """Concrete overflow-walk length: how many NEIGHBOR shards a lane
+    may retry after its home shard fails.  ``None`` = all S−1 neighbors
+    (a request fails only when every shard is exhausted)."""
+    if overflow_walk is None:
+        return num_shards - 1
+    if not isinstance(overflow_walk, int) or overflow_walk < 0:
+        raise ValueError(
+            f"overflow_walk must be None or an int >= 0, got "
+            f"{overflow_walk!r}")
+    return min(overflow_walk, num_shards - 1)
+
+
+def static_hint(shard_hint) -> Optional[int]:
+    """``shard_hint`` as a static Python int when it is one (incl.
+    numpy integer scalars), else None — the predicate deciding whether
+    the pinned fast path can apply."""
+    if shard_hint is None or isinstance(shard_hint, bool):
+        return None
+    if isinstance(shard_hint, numbers.Integral):
+        return int(shard_hint)
+    return None
+
+
+def home_shards(n: int, num_shards: int, shard_hint=None):
+    """Per-lane home-shard vector, shared verbatim by the oracle and
+    both kernel lowerings (so routing can never diverge between them).
+
+    ``shard_hint=None`` hashes the lane index; an integer pins every
+    lane to one shard; an array gives per-lane homes (e.g. the KV
+    cache routing each sequence slot to ``slot % S``)."""
+    if shard_hint is None:
+        i = jnp.arange(n, dtype=jnp.uint32)
+        h = i * jnp.uint32(_HASH_MULT)
+        h = h ^ (h >> jnp.uint32(16))
+        return (h % jnp.uint32(num_shards)).astype(jnp.int32)
+    pinned = static_hint(shard_hint)
+    if pinned is not None:
+        return jnp.full(n, pinned % num_shards, jnp.int32)
+    hint = jnp.asarray(shard_hint, jnp.int32)
+    if hint.shape != (n,):
+        raise ValueError(
+            f"shard_hint array must have shape ({n},), got {hint.shape}")
+    return hint % num_shards
+
+
+def init(cfg: HeapConfig, num_shards: int, kind: str,
+         family: str) -> ShardedArena:
+    """S identical fresh shards (each shard inits exactly like a
+    single arena of the per-shard config — backend- and lowering-free,
+    like ``transactions.init``)."""
+    from repro.core import transactions  # lazy: shards <-> transactions
+    sub = transactions.init(shard_config(cfg, num_shards), kind, family)
+    return ShardedArena(mem=jnp.tile(sub.mem[None], (num_shards, 1)),
+                        ctl=jnp.tile(sub.ctl[None], (num_shards, 1)))
+
+
+# --------------------------------------------------------------------------
+# views: global heap, per-shard slabs, per-region stacks
+# --------------------------------------------------------------------------
+
+def heap_of(slay: ShardLayout, state: ShardedArena):
+    """The GLOBAL heap view (S·shard_words,): per-shard heap regions
+    concatenated in shard order, so global word offsets index it
+    directly (write_pattern/check_pattern run on this view)."""
+    W = slay.shard_words
+    return jax.lax.slice(state.mem, (0, 0),
+                         (slay.num_shards, W)).reshape(-1)
+
+
+def with_heap(slay: ShardLayout, state: ShardedArena,
+              heap) -> ShardedArena:
+    """State with the global heap view replaced (inverse of heap_of)."""
+    W = slay.shard_words
+    return state._replace(mem=jax.lax.dynamic_update_slice(
+        state.mem, heap.reshape(slay.num_shards, W), (0, 0)))
+
+
+def shard_of(slay: ShardLayout, offsets_words):
+    """Owning shard of each global offset (−1 for failed lanes)."""
+    return jnp.where(offsets_words >= 0,
+                     offsets_words // slay.shard_words, -1)
+
+
+def take_shard(state: ShardedArena, s: int) -> arena.Arena:
+    """Shard ``s``'s slab as a plain single-arena state (static slice:
+    the pinned fast path runs the single-arena kernel on exactly this,
+    and the other shards never enter the kernel)."""
+    return arena.Arena(mem=state.mem[s], ctl=state.ctl[s])
+
+
+def with_shard(state: ShardedArena, s: int,
+               sub: arena.Arena) -> ShardedArena:
+    """Inverse of :func:`take_shard`: replace one shard's slab."""
+    return ShardedArena(mem=state.mem.at[s].set(sub.mem),
+                        ctl=state.ctl.at[s].set(sub.ctl))
+
+
+def split_regions(slay: ShardLayout, mem):
+    """``mem`` (S, mem_words) as {region: (S, region words)} stacked
+    per-shard views (zero-cost static slices — the sharded blocked
+    lowering's plumbing, mirroring ``arena.split``)."""
+    S = slay.num_shards
+    return {r.name: jax.lax.slice(mem, (0, r.offset), (S, r.end))
+            for r in slay.shard.regions}
+
+
+def join_regions(slay: ShardLayout, parts):
+    """Inverse of :func:`split_regions`."""
+    S = slay.num_shards
+    return jnp.concatenate([parts[r.name].reshape(S, -1)
+                            for r in slay.shard.regions], axis=1)

@@ -36,12 +36,21 @@ Two execution paths share one body:
              tests/test_alloc_txn_parity.py holds all implementations
              bit-identical and asserts the one-kernel property on the
              jaxpr for both lowerings.
+
+The ``sharded_*`` entry points are the same contract over a
+:class:`~repro.core.shards.ShardedArena` (num_shards independent
+arenas, home-shard routing, bounded overflow walk — DESIGN.md §9):
+``sharded_alloc_math``/``sharded_free_math`` are the serial
+single-shard replay oracle, and the Pallas backends grid that exact
+schedule into ONE pallas_call per transaction.
 """
 from __future__ import annotations
 
 from typing import Tuple
 
-from repro.core import arena, chunk_alloc, page_alloc
+import jax.numpy as jnp
+
+from repro.core import arena, chunk_alloc, page_alloc, shards
 from repro.core.heap import HeapConfig
 from repro.core.page_alloc import AllocState
 
@@ -56,9 +65,13 @@ def _views(cfg: HeapConfig, kind: str, family: str, mem, ctl):
     return lay, AllocState(q=q, ctx=ctx, meta=meta)
 
 
-def init(cfg: HeapConfig, kind: str, family: str) -> arena.Arena:
+def init(cfg: HeapConfig, kind: str, family: str, num_shards: int = 1):
     """Build the arena (backend-free, so a live heap can switch
-    backends mid-stream — asserted by the parity tests)."""
+    backends mid-stream — asserted by the parity tests).  With
+    ``num_shards > 1`` the state is a :class:`shards.ShardedArena` of
+    ``num_shards`` identical fresh per-shard arenas."""
+    if num_shards != 1:
+        return shards.init(cfg, num_shards, kind, family)
     lay = arena.layout(cfg, kind, family)
     st = _impl(kind).init(cfg, family)
     return arena.pack(lay, st.q, st.ctx, st.meta)
@@ -104,7 +117,22 @@ def alloc(cfg: HeapConfig, kind: str, family: str, state: arena.Arena,
     offset −1 marks a failed lane (over-large size / exhausted
     inventory), matching the GPU original's nullptr.  ``lowering``
     picks the Pallas kernel shape (whole-arena refs vs the
-    region-blocked compiled lowering — kernels/ops.resolve_lowering)."""
+    region-blocked compiled lowering — kernels/ops.resolve_lowering).
+
+    The dispatcher is the layer below the ``Ouroboros`` facade — same
+    semantics, explicit (kind, family):
+
+    >>> import jax.numpy as jnp
+    >>> from repro.core import HeapConfig, transactions
+    >>> cfg = HeapConfig(total_bytes=1 << 16, chunk_bytes=1 << 11,
+    ...                  min_page_bytes=16)
+    >>> st = transactions.init(cfg, "page", "ring")
+    >>> sizes = jnp.full(2, 64, jnp.int32)
+    >>> st, offs = transactions.alloc(cfg, "page", "ring", st, sizes,
+    ...                               jnp.ones(2, bool))
+    >>> bool((offs >= 0).all())
+    True
+    """
     _check_backend(backend)
     if backend == "pallas":
         from repro.kernels import ops as kops
@@ -121,6 +149,26 @@ def alloc(cfg: HeapConfig, kind: str, family: str, state: arena.Arena,
 def free(cfg: HeapConfig, kind: str, family: str, state: arena.Arena,
          offsets_words, sizes_bytes, mask, backend: str = "jnp",
          lowering: str = "auto"):
+    """One bulk free transaction (inverse of :func:`alloc`; masked or
+    negative-offset lanes are no-ops).  Freed pages become grantable
+    again immediately:
+
+    >>> import jax.numpy as jnp
+    >>> from repro.core import HeapConfig, transactions
+    >>> cfg = HeapConfig(total_bytes=1 << 16, chunk_bytes=1 << 11,
+    ...                  min_page_bytes=16)
+    >>> st = transactions.init(cfg, "page", "ring")
+    >>> sizes = jnp.full(2, 64, jnp.int32)
+    >>> ones = jnp.ones(2, bool)
+    >>> st, offs = transactions.alloc(cfg, "page", "ring", st, sizes,
+    ...                               ones)
+    >>> st = transactions.free(cfg, "page", "ring", st, offs, sizes,
+    ...                        ones)
+    >>> st, offs2 = transactions.alloc(cfg, "page", "ring", st, sizes,
+    ...                                ones)
+    >>> bool((offs2 >= 0).all())
+    True
+    """
     _check_backend(backend)
     if backend == "pallas":
         from repro.kernels import ops as kops
@@ -143,3 +191,155 @@ def compact(cfg: HeapConfig, kind: str, family: str,
     lay, st = _views(cfg, kind, family, state.mem, state.ctl)
     st = chunk_alloc.compact(cfg, family, st)
     return arena.pack(lay, st.q, st.ctx, st.meta)
+
+
+# ---------------------------------------------------------------------------
+# sharded transactions: serial replay oracle + the sharded dispatcher
+# ---------------------------------------------------------------------------
+#
+# The sharded correctness contract (DESIGN.md §9) is a SCHEDULE: a bulk
+# transaction over S shards behaves exactly as if the wavefront were
+# replayed serially through S independent single-arena allocators,
+# attempt-major then shard-minor —
+#
+#     for attempt a in 0..walk:
+#         for shard s in 0..S-1:
+#             serve the still-unserved lanes whose (home + a) % S == s
+#
+# ``sharded_alloc_math``/``sharded_free_math`` below ARE that replay
+# (the jnp oracle); the Pallas lowerings grid the same schedule into
+# ONE pallas_call (kernels/alloc_txn.sharded_arena_*_txn and
+# kernels/alloc_txn_blocked.sharded_arena_*_txn_blocked), so
+# bit-identity with the serial replay is checked word for word by
+# tests/test_alloc_txn_parity.py.
+
+def sharded_alloc_math(cfg: HeapConfig, num_shards: int, kind: str,
+                       family: str, mem, ctl, sizes_bytes, mask, home,
+                       walk: int) -> Tuple:
+    """Serial single-shard oracle replay of one sharded alloc.  Lanes
+    route to ``home`` first; lanes a shard cannot serve retry on the
+    next ``walk`` neighbor shards.  Returns (mem', ctl', offsets) with
+    offsets GLOBAL (shard · shard_words + local; −1 = every visited
+    shard failed the lane).
+
+    The replay is a nested ``lax.scan`` over (attempt, shard) rather
+    than an unrolled loop: the schedule is identical step for step (so
+    results are bit-identical to the gridded kernels), but the
+    single-arena transaction math compiles ONCE instead of
+    (walk+1)·num_shards times — for chunk variants that is the
+    difference between seconds and minutes of XLA compile."""
+    import jax
+
+    scfg = shards.shard_config(cfg, num_shards)
+    Ws = scfg.total_words
+    n = sizes_bytes.shape[0]
+    S = num_shards
+
+    def shard_step(carry, s):
+        mem, ctl, offs, a = carry
+        sel = mask & ((home + a) % S == s) & (offs < 0)
+        m2, c2, local = alloc_math(
+            scfg, kind, family,
+            jax.lax.dynamic_index_in_dim(mem, s, 0, keepdims=False),
+            jax.lax.dynamic_index_in_dim(ctl, s, 0, keepdims=False),
+            sizes_bytes, sel)
+        mem = jax.lax.dynamic_update_index_in_dim(mem, m2, s, 0)
+        ctl = jax.lax.dynamic_update_index_in_dim(ctl, c2, s, 0)
+        offs = jnp.where(sel & (local >= 0), s * Ws + local, offs)
+        return (mem, ctl, offs, a), None
+
+    def attempt_step(carry, a):
+        mem, ctl, offs = carry
+        (mem, ctl, offs, _), _ = jax.lax.scan(
+            shard_step, (mem, ctl, offs, a),
+            jnp.arange(S, dtype=jnp.int32))
+        return (mem, ctl, offs), None
+
+    offs0 = jnp.full(n, -1, jnp.int32)
+    (mem, ctl, offs), _ = jax.lax.scan(
+        attempt_step, (mem, ctl, offs0),
+        jnp.arange(walk + 1, dtype=jnp.int32))
+    return mem, ctl, offs
+
+
+def sharded_free_math(cfg: HeapConfig, num_shards: int, kind: str,
+                      family: str, mem, ctl, offsets_words, sizes_bytes,
+                      mask) -> Tuple:
+    """Serial replay of one sharded free: each lane's owning shard is
+    determined by its global offset (no overflow walk — an offset lives
+    on exactly one shard), shards visited in order (a ``lax.scan``, as
+    in :func:`sharded_alloc_math`)."""
+    import jax
+
+    scfg = shards.shard_config(cfg, num_shards)
+    Ws = scfg.total_words
+    sh = jnp.where(offsets_words >= 0, offsets_words // Ws, -1)
+
+    def shard_step(carry, s):
+        mem, ctl = carry
+        sel = mask & (sh == s)
+        local = jnp.where(sel, offsets_words - s * Ws, -1)
+        m2, c2 = free_math(
+            scfg, kind, family,
+            jax.lax.dynamic_index_in_dim(mem, s, 0, keepdims=False),
+            jax.lax.dynamic_index_in_dim(ctl, s, 0, keepdims=False),
+            local, sizes_bytes, sel)
+        mem = jax.lax.dynamic_update_index_in_dim(mem, m2, s, 0)
+        ctl = jax.lax.dynamic_update_index_in_dim(ctl, c2, s, 0)
+        return (mem, ctl), None
+
+    (mem, ctl), _ = jax.lax.scan(shard_step, (mem, ctl),
+                                 jnp.arange(num_shards, dtype=jnp.int32))
+    return mem, ctl
+
+
+def sharded_alloc(cfg: HeapConfig, num_shards: int, kind: str,
+                  family: str, state: shards.ShardedArena, sizes_bytes,
+                  mask, home, walk: int, backend: str = "jnp",
+                  lowering: str = "auto"):
+    """One bulk sharded allocation transaction (see module docstring
+    for the schedule).  ``home`` is the per-lane home-shard vector
+    (``shards.home_shards``), shared by every backend so routing can
+    never diverge.  Still ONE pallas_call under ``backend="pallas"``:
+    the kernels grid the (attempt, shard) schedule."""
+    _check_backend(backend)
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        mem, ctl, offs = kops.sharded_arena_alloc_txn(
+            cfg, num_shards, kind, family, state.mem, state.ctl,
+            sizes_bytes, mask, home, walk, lowering=lowering)
+    else:
+        mem, ctl, offs = sharded_alloc_math(
+            cfg, num_shards, kind, family, state.mem, state.ctl,
+            sizes_bytes, mask, home, walk)
+    return shards.ShardedArena(mem=mem, ctl=ctl), offs
+
+
+def sharded_free(cfg: HeapConfig, num_shards: int, kind: str,
+                 family: str, state: shards.ShardedArena, offsets_words,
+                 sizes_bytes, mask, backend: str = "jnp",
+                 lowering: str = "auto"):
+    _check_backend(backend)
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        mem, ctl = kops.sharded_arena_free_txn(
+            cfg, num_shards, kind, family, state.mem, state.ctl,
+            offsets_words, sizes_bytes, mask, lowering=lowering)
+    else:
+        mem, ctl = sharded_free_math(
+            cfg, num_shards, kind, family, state.mem, state.ctl,
+            offsets_words, sizes_bytes, mask)
+    return shards.ShardedArena(mem=mem, ctl=ctl)
+
+
+def sharded_compact(cfg: HeapConfig, num_shards: int, kind: str,
+                    family: str,
+                    state: shards.ShardedArena) -> shards.ShardedArena:
+    """Per-shard defragmentation (shards are independent heaps)."""
+    if kind != "chunk":
+        return state
+    scfg = shards.shard_config(cfg, num_shards)
+    subs = [compact(scfg, kind, family, shards.take_shard(state, s))
+            for s in range(num_shards)]
+    return shards.ShardedArena(mem=jnp.stack([a.mem for a in subs]),
+                               ctl=jnp.stack([a.ctl for a in subs]))

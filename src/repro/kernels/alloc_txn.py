@@ -334,3 +334,131 @@ def arena_free_txn(cfg, kind, family, mem, ctl, offsets_words,
         interpret=interpret,
     )(mem, ctl, offsets_words.astype(jnp.int32),
       sizes_bytes.astype(jnp.int32), mask.astype(jnp.int32))
+
+
+# --------------------------------------------------------------------------
+# sharded whole-lowering: the (attempt, shard) schedule as one grid
+# --------------------------------------------------------------------------
+#
+# One pallas_call per sharded transaction (core/shards.py, DESIGN.md
+# §9).  The grid is (walk+1, num_shards) for alloc — step (a, s) runs
+# the full single-arena transaction math on shard s's slab for the
+# still-unserved lanes whose (home + a) % S == s, exactly the serial
+# replay order of transactions.sharded_alloc_math — and (num_shards,)
+# for free (an offset lives on exactly one shard).  Shard slabs stage
+# through BlockSpec row selection; the offsets vector is a
+# grid-persistent accumulator block (constant index map) whose −1
+# lanes mark "still unserved" for later attempts.  mem/ctl are
+# input/output-aliased as in the single-arena kernels; outputs are
+# staged from the inputs on each shard's FIRST visit only, so later
+# attempts see the earlier attempts' updates.
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "num_shards", "kind", "family",
+                                    "walk", "interpret"))
+def sharded_arena_alloc_txn(cfg, num_shards, kind, family, mem, ctl,
+                            sizes_bytes, mask, home, walk, *,
+                            interpret: bool = False):
+    """Sharded fused alloc: ONE pallas_call gridding the overflow-walk
+    schedule over per-shard slabs.  Returns ``(new_mem, new_ctl,
+    global_offsets)`` — bit-identical to
+    ``transactions.sharded_alloc_math``."""
+    from repro.core import shards, transactions  # lazy: kernels <-> core
+
+    S = num_shards
+    scfg = shards.shard_config(cfg, S)
+    Ws = scfg.total_words
+    Mw, Cw = mem.shape[1], ctl.shape[1]
+    n = sizes_bytes.shape[0]
+
+    def kernel(mem_ref, ctl_ref, sizes_ref, valid_ref, home_ref,
+               omem_ref, octl_ref, offs_ref):
+        a = pl.program_id(0)
+        s = pl.program_id(1)
+
+        @pl.when((a == 0) & (s == 0))
+        def _first():
+            offs_ref[...] = jnp.full((n,), -1, jnp.int32)
+
+        @pl.when(a == 0)
+        def _stage():  # first visit of shard s: boundary state in
+            omem_ref[...] = mem_ref[...]
+            octl_ref[...] = ctl_ref[...]
+
+        sel = ((valid_ref[...] != 0)
+               & ((home_ref[...] + a) % S == s)
+               & (offs_ref[...] < 0))
+        nm, nc, local = transactions.alloc_math(
+            scfg, kind, family, omem_ref[0, :], octl_ref[0, :],
+            sizes_ref[...], sel)
+        omem_ref[0, :] = nm
+        octl_ref[0, :] = nc
+        offs_ref[...] = jnp.where(sel & (local >= 0), s * Ws + local,
+                                  offs_ref[...])
+
+    lane = pl.BlockSpec((n,), lambda a, s: (0,))
+    return pl.pallas_call(
+        kernel,
+        grid=(walk + 1, S),
+        in_specs=[pl.BlockSpec((1, Mw), lambda a, s: (s, 0)),
+                  pl.BlockSpec((1, Cw), lambda a, s: (s, 0)),
+                  lane, lane, lane],
+        out_specs=[pl.BlockSpec((1, Mw), lambda a, s: (s, 0)),
+                   pl.BlockSpec((1, Cw), lambda a, s: (s, 0)),
+                   pl.BlockSpec((n,), lambda a, s: (0,))],
+        out_shape=[jax.ShapeDtypeStruct((S, Mw), jnp.int32),
+                   jax.ShapeDtypeStruct((S, Cw), jnp.int32),
+                   jax.ShapeDtypeStruct((n,), jnp.int32)],
+        input_output_aliases={0: 0, 1: 1},
+        interpret=interpret,
+    )(mem, ctl, sizes_bytes.astype(jnp.int32), mask.astype(jnp.int32),
+      home.astype(jnp.int32))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "num_shards", "kind", "family",
+                                    "interpret"))
+def sharded_arena_free_txn(cfg, num_shards, kind, family, mem, ctl,
+                           offsets_words, sizes_bytes, mask, *,
+                           interpret: bool = False):
+    """Sharded fused free: grid over shards, each step freeing the
+    lanes whose global offsets it owns.  Returns ``(new_mem,
+    new_ctl)`` — bit-identical to ``transactions.sharded_free_math``."""
+    from repro.core import shards, transactions  # lazy: kernels <-> core
+
+    S = num_shards
+    scfg = shards.shard_config(cfg, S)
+    Ws = scfg.total_words
+    Mw, Cw = mem.shape[1], ctl.shape[1]
+    n = sizes_bytes.shape[0]
+
+    def kernel(mem_ref, ctl_ref, offs_ref, sizes_ref, valid_ref,
+               omem_ref, octl_ref):
+        s = pl.program_id(0)
+        omem_ref[...] = mem_ref[...]  # each shard is visited once
+        octl_ref[...] = ctl_ref[...]
+        offs = offs_ref[...]
+        sh = jnp.where(offs >= 0, offs // Ws, -1)
+        sel = (valid_ref[...] != 0) & (sh == s)
+        local = jnp.where(sel, offs - s * Ws, -1)
+        nm, nc = transactions.free_math(
+            scfg, kind, family, omem_ref[0, :], octl_ref[0, :], local,
+            sizes_ref[...], sel)
+        omem_ref[0, :] = nm
+        octl_ref[0, :] = nc
+
+    lane = pl.BlockSpec((n,), lambda s: (0,))
+    return pl.pallas_call(
+        kernel,
+        grid=(S,),
+        in_specs=[pl.BlockSpec((1, Mw), lambda s: (s, 0)),
+                  pl.BlockSpec((1, Cw), lambda s: (s, 0)),
+                  lane, lane, lane],
+        out_specs=[pl.BlockSpec((1, Mw), lambda s: (s, 0)),
+                   pl.BlockSpec((1, Cw), lambda s: (s, 0))],
+        out_shape=[jax.ShapeDtypeStruct((S, Mw), jnp.int32),
+                   jax.ShapeDtypeStruct((S, Cw), jnp.int32)],
+        input_output_aliases={0: 0, 1: 1},
+        interpret=interpret,
+    )(mem, ctl, offsets_words.astype(jnp.int32),
+      sizes_bytes.astype(jnp.int32), mask.astype(jnp.int32))

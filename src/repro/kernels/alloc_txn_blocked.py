@@ -73,13 +73,38 @@ NULL = -1
 # scalar / row staging helpers (the DMA vocabulary of the blocked kernels)
 # --------------------------------------------------------------------------
 
+class _ShardView:
+    """A flat HBM(ANY) ref addressed at a per-shard base offset.
+
+    The sharded wrapper (``_txn_call_sharded``) keeps hbm regions as
+    ONE flat (S · words) ref shared by every grid step and hands the
+    per-class bodies a ``_ShardView(ref, s · words)`` instead; the
+    helpers below unwrap it by adding ``base`` to every address, so the
+    bodies stay byte-for-byte identical between the single-arena and
+    the sharded blocked lowering."""
+    __slots__ = ("ref", "base")
+
+    def __init__(self, ref, base):
+        self.ref = ref
+        self.base = base
+
+
+def _at(ref, i):
+    """Resolve (ref, index) through an optional :class:`_ShardView`."""
+    if isinstance(ref, _ShardView):
+        return ref.ref, ref.base + i
+    return ref, i
+
+
 def _ld(ref, i):
     """Dynamic scalar load from a flat ref."""
+    ref, i = _at(ref, i)
     return pl.load(ref, (pl.ds(i, 1),))[0]
 
 
 def _st(ref, i, v):
     """Dynamic scalar store to a flat ref."""
+    ref, i = _at(ref, i)
     pl.store(ref, (pl.ds(i, 1),),
              jnp.reshape(v, (1,)).astype(ref.dtype))
 
@@ -87,14 +112,15 @@ def _st(ref, i, v):
 def _ld_if(ref, i, cond, fill=NULL):
     """Predicated scalar load: ``ref[i] if cond else fill`` (reads a
     safe address when masked, mirroring the oracle's fill-gather)."""
-    v = pl.load(ref, (pl.ds(jnp.where(cond, i, 0), 1),))[0]
+    ref, a = _at(ref, jnp.where(cond, i, 0))
+    v = pl.load(ref, (pl.ds(a, 1),))[0]
     return jnp.where(cond, v, fill)
 
 
 def _st_if(ref, i, v, cond):
     """Predicated scalar store as a safe-address read-modify-write
     (the in-kernel form of the oracle's ``.set(..., mode="drop")``)."""
-    a = jnp.where(cond, i, 0)
+    ref, a = _at(ref, jnp.where(cond, i, 0))
     old = pl.load(ref, (pl.ds(a, 1),))
     pl.store(ref, (pl.ds(a, 1),),
              jnp.where(cond, jnp.reshape(v, (1,)).astype(old.dtype), old))
@@ -115,12 +141,19 @@ def _row_st_if(ref, j, v, cond):
 
 def _vec_ld(ref, start, length):
     """Dynamic row load (``length`` static) from a flat HBM ref."""
+    ref, start = _at(ref, start)
     return pl.load(ref, (pl.ds(start, length),))
+
+
+def _vec_st(ref, start, vals):
+    """Dynamic row store to a flat HBM ref."""
+    ref, start = _at(ref, start)
+    pl.store(ref, (pl.ds(start, vals.shape[0]),), vals.astype(ref.dtype))
 
 
 def _vec_st_if(ref, start, vals, cond):
     """Predicated row store to a flat HBM ref (safe-address RMW)."""
-    a = jnp.where(cond, start, 0)
+    ref, a = _at(ref, jnp.where(cond, start, 0))
     old = pl.load(ref, (pl.ds(a, vals.shape[0]),))
     pl.store(ref, (pl.ds(a, vals.shape[0]),),
              jnp.where(cond, vals.astype(old.dtype), old))
@@ -558,8 +591,8 @@ def _chunk_alloc(cfg, lay, family, c, sizes, valid_i32, E, octl,
             _vec_ld(bitmap_ref, idxc * bw, bw), jnp.uint32)
         page_idx, new_row_u, total = _bitmap_claim(row_u, ppc, t,
                                                    maxbits, bw)
-        pl.store(bitmap_ref, (pl.ds(idxc * bw, bw),),
-                 jax.lax.bitcast_convert_type(new_row_u, jnp.int32))
+        _vec_st(bitmap_ref, idxc * bw,
+                jax.lax.bitcast_convert_type(new_row_u, jnp.int32))
         _st_if(fc_ref, idxc, f - total, total > 0)
 
         # -- scatter granted offsets to the lanes of this iteration ----
@@ -905,4 +938,223 @@ def arena_free_txn_blocked(cfg, kind, family, mem, ctl, offsets_words,
              sizes_bytes.astype(jnp.int32), mask.astype(jnp.int32))
     mem2, octl, _ = _txn_call(cfg, kind, family, "free", mem, ctl,
                               lanes, n, interpret)
+    return mem2, octl
+
+
+# --------------------------------------------------------------------------
+# sharded wrapper: the (attempt, shard, class) grid (DESIGN.md §9)
+# --------------------------------------------------------------------------
+#
+# The sharded blocked lowering reuses every per-class body above
+# untouched: the grid grows two leading dimensions — attempt a (the
+# overflow walk; 1 for free) and shard s — and every region spec gains
+# a shard coordinate:
+#
+# - row regions stack to (S·C, w) and step (a, s, c) stages row
+#   s·C + c — still exactly one class row in VMEM per step;
+# - resident regions stack flat to (S·words,) with a (words,) block
+#   selected by s, so the bodies keep seeing a single shard's block;
+# - hbm regions stay ONE flat (S·words,) ANY ref; the bodies receive a
+#   _ShardView(ref, s·words), so every word address they compute lands
+#   in shard s's slice;
+# - ctl prefetches flat (S·ctl_words,); the accumulator output is
+#   blocked per shard the same way.
+#
+# Output blocks are staged from the inputs on each (shard, row)'s
+# FIRST visit only (a == 0): later attempts revisit the block and must
+# see the earlier attempts' updates, not the boundary state.  The
+# per-class bodies return shard-LOCAL offsets; the wrapper globalizes
+# newly-served lanes (prev < 0, new >= 0) with s · shard_words before
+# the next grid step, which is also what keeps the "still unserved"
+# test (offs < 0) correct across attempts.
+
+def _txn_call_sharded(cfg, num_shards, walk, kind, family, op, mem, ctl,
+                      lanes, n, interpret):
+    from repro.core import shards as _shards  # lazy: kernels <-> core
+
+    S = num_shards
+    scfg = _shards.shard_config(cfg, S)
+    slay = _shards.layout(cfg, S, kind, family)
+    lay = slay.shard
+    Ws = scfg.total_words
+    C = scfg.num_classes
+    Cw = lay.ctl_words
+    parts = _shards.split_regions(slay, mem)   # {name: (S, words)}
+    reads = _READS[(kind, family, op)]
+    writes = _WRITES[(kind, family, op)]
+    A = walk + 1 if op == "alloc" else 1
+    hbm_words = {nm: lay.region(nm).words
+                 for nm in set(reads) | set(writes)
+                 if lay.region(nm).blocking == "hbm"}
+
+    def _arr(name):
+        r = lay.region(name)
+        p = parts[name]
+        if r.blocking == "row":
+            return p.reshape(S * r.shape[0], r.shape[1])
+        return p.reshape(S * r.words)
+
+    def _spec(name):
+        r = lay.region(name)
+        if r.blocking == "row":
+            return pl.BlockSpec((1, r.shape[1]),
+                                lambda a, s, c, t, C=C: (s * C + c, 0))
+        if r.blocking == "resident":
+            return pl.BlockSpec((r.words,), lambda a, s, c, t: (s,))
+        return pl.BlockSpec(memory_space=pltpu.ANY)
+
+    def _oshape(name):
+        r = lay.region(name)
+        if r.blocking == "row":
+            return jax.ShapeDtypeStruct((S * r.shape[0], r.shape[1]),
+                                        jnp.int32)
+        return jax.ShapeDtypeStruct((S * r.words,), jnp.int32)
+
+    lane_spec = pl.BlockSpec((n,), lambda a, s, c, t: (0,))
+    in_arrays = list(lanes) + [_arr(nm) for nm in reads]
+    in_specs = [lane_spec] * len(lanes) + [_spec(nm) for nm in reads]
+
+    out_specs = [_spec(nm) for nm in writes]
+    out_shapes = [_oshape(nm) for nm in writes]
+    out_specs.append(pl.BlockSpec((Cw,), lambda a, s, c, t: (s,)))
+    out_shapes.append(jax.ShapeDtypeStruct((S * Cw,), jnp.int32))
+    if op == "alloc":
+        out_specs.append(pl.BlockSpec((n,), lambda a, s, c, t: (0,)))
+        out_shapes.append(jax.ShapeDtypeStruct((n,), jnp.int32))
+    elif kind == "chunk":
+        # revived-chunk flags, per shard (computed at the shard's
+        # c == 0 step, read by its every class step)
+        out_specs.append(pl.BlockSpec((scfg.num_chunks,),
+                                      lambda a, s, c, t: (s,)))
+        out_shapes.append(jax.ShapeDtypeStruct((S * scfg.num_chunks,),
+                                               jnp.int32))
+
+    aliases = {1 + len(lanes) + reads.index(nm): writes.index(nm)
+               for nm in writes if lay.region(nm).blocking == "hbm"}
+
+    n_in = len(in_arrays)
+    n_w = len(writes)
+
+    def kernel(ctl_ref, *refs):
+        in_refs, out_refs = refs[:n_in], refs[n_in:]
+        lane_vals = [r[...] for r in in_refs[:len(lanes)]]
+        R = dict(zip(reads, in_refs[len(lanes):]))
+        O = dict(zip(writes, out_refs[:n_w]))
+        octl = out_refs[n_w]
+        a = pl.program_id(0)
+        s = pl.program_id(1)
+        c = pl.program_id(2)
+
+        @pl.when((a == 0) & (s == 0) & (c == 0))
+        def _once():
+            if interpret:
+                # hbm write regions are input/output-aliased: on device
+                # this copy is a no-op; interpret-mode output buffers
+                # start unaliased (as in _txn_call).
+                for nm in writes:
+                    if lay.region(nm).blocking == "hbm":
+                        O[nm][...] = R[nm][...]
+            if op == "alloc":
+                out_refs[n_w + 1][...] = jnp.full((n,), NULL, jnp.int32)
+
+        @pl.when((a == 0) & (c == 0))
+        def _per_shard():
+            octl[...] = pl.load(ctl_ref, (pl.ds(s * Cw, Cw),))
+            for nm in writes:
+                if lay.region(nm).blocking == "resident":
+                    O[nm][...] = R[nm][...]
+
+        @pl.when(a == 0)
+        def _stage_rows():   # each (s, c) row's first (only input) copy
+            for nm in writes:
+                if lay.region(nm).blocking == "row":
+                    O[nm][0, :] = R[nm][0, :]
+
+        def _wrap(nm, ref):
+            if lay.region(nm).blocking == "hbm":
+                return _ShardView(ref, s * hbm_words[nm])
+            return ref
+
+        E = {nm: _wrap(nm, O.get(nm, R[nm])) for nm in reads}
+
+        if op == "alloc":
+            sizes, valid, home = lane_vals
+            offs_ref = out_refs[n_w + 1]
+            cur = offs_ref[...]
+            sel = ((valid != 0) & ((home + a) % S == s) & (cur < 0))
+            sel_i = sel.astype(jnp.int32)
+            if kind == "page":
+                fn = {"ring": _page_ring_alloc, "va": _page_va_alloc,
+                      "vl": _page_vl_alloc}[family]
+                fn(scfg, lay, c, sizes, sel_i, E, octl, offs_ref)
+            else:
+                _chunk_alloc(scfg, lay, family, c, sizes, sel_i, E,
+                             octl, offs_ref)
+            new = offs_ref[...]
+            offs_ref[...] = jnp.where((cur < 0) & (new >= 0),
+                                      new + s * Ws, new)
+        else:
+            offsets, sizes, valid = lane_vals
+            sh = jnp.where(offsets >= 0, offsets // Ws, -1)
+            sel = (valid != 0) & (sh == s)
+            local = jnp.where(sel, offsets - s * Ws, -1)
+            sel_i = sel.astype(jnp.int32)
+            if kind == "page":
+                fn = {"ring": _page_ring_free, "va": _page_va_free,
+                      "vl": _page_vl_free}[family]
+                fn(scfg, lay, c, local, sizes, sel_i, E, octl)
+            else:
+                _chunk_free(scfg, lay, family, c, local, sizes, sel_i,
+                            E, octl, out_refs[n_w + 1],
+                            R["free_count"])
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1, grid=(A, S, C),
+        in_specs=in_specs, out_specs=out_specs)
+    outs = pl.pallas_call(
+        kernel, grid_spec=grid_spec, out_shape=out_shapes,
+        input_output_aliases=aliases, interpret=interpret,
+    )(ctl.reshape(-1).astype(jnp.int32), *in_arrays)
+
+    new_parts = dict(parts)
+    for nm, val in zip(writes, outs[:n_w]):
+        new_parts[nm] = val.reshape(S, -1)
+    new_mem = _shards.join_regions(slay, new_parts)
+    new_ctl = outs[n_w].reshape(S, Cw)
+    return new_mem, new_ctl, outs[n_w + 1:]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "num_shards", "kind", "family",
+                                    "walk", "interpret"))
+def sharded_arena_alloc_txn_blocked(cfg, num_shards, kind, family, mem,
+                                    ctl, sizes_bytes, mask, home, walk,
+                                    *, interpret: bool = False):
+    """Sharded region-blocked alloc: ONE ``pallas_call`` over the
+    (attempt, shard, class) grid, bit-identical to
+    ``transactions.sharded_alloc_math`` and to the sharded whole
+    lowering.  Returns ``(new_mem, new_ctl, global_offsets)``."""
+    n = sizes_bytes.shape[0]
+    lanes = (sizes_bytes.astype(jnp.int32), mask.astype(jnp.int32),
+             home.astype(jnp.int32))
+    mem2, octl, extra = _txn_call_sharded(cfg, num_shards, walk, kind,
+                                          family, "alloc", mem, ctl,
+                                          lanes, n, interpret)
+    return mem2, octl, extra[0]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "num_shards", "kind", "family",
+                                    "interpret"))
+def sharded_arena_free_txn_blocked(cfg, num_shards, kind, family, mem,
+                                   ctl, offsets_words, sizes_bytes,
+                                   mask, *, interpret: bool = False):
+    """Sharded region-blocked free: grid (1, shard, class).  Returns
+    ``(new_mem, new_ctl)``."""
+    n = sizes_bytes.shape[0]
+    lanes = (offsets_words.astype(jnp.int32),
+             sizes_bytes.astype(jnp.int32), mask.astype(jnp.int32))
+    mem2, octl, _ = _txn_call_sharded(cfg, num_shards, 0, kind, family,
+                                      "free", mem, ctl, lanes, n,
+                                      interpret)
     return mem2, octl

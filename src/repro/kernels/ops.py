@@ -100,6 +100,35 @@ def arena_free_txn(cfg, kind, family, mem, ctl, offsets_words,
                                      interpret=_interpret())
 
 
+def sharded_arena_alloc_txn(cfg, num_shards, kind, family, mem, ctl,
+                            sizes_bytes, mask, home, walk,
+                            lowering: str = "auto"):
+    """Whole SHARDED alloc transaction (overflow-walk schedule gridded
+    over per-shard slabs, core/shards.py) in one pallas_call."""
+    if resolve_lowering(lowering) == "blocked":
+        from repro.kernels import alloc_txn_blocked as _blk
+        return _blk.sharded_arena_alloc_txn_blocked(
+            cfg, num_shards, kind, family, mem, ctl, sizes_bytes, mask,
+            home, walk, interpret=_interpret())
+    return _alloc_txn.sharded_arena_alloc_txn(
+        cfg, num_shards, kind, family, mem, ctl, sizes_bytes, mask,
+        home, walk, interpret=_interpret())
+
+
+def sharded_arena_free_txn(cfg, num_shards, kind, family, mem, ctl,
+                           offsets_words, sizes_bytes, mask,
+                           lowering: str = "auto"):
+    """Whole SHARDED free transaction in one pallas_call."""
+    if resolve_lowering(lowering) == "blocked":
+        from repro.kernels import alloc_txn_blocked as _blk
+        return _blk.sharded_arena_free_txn_blocked(
+            cfg, num_shards, kind, family, mem, ctl, offsets_words,
+            sizes_bytes, mask, interpret=_interpret())
+    return _alloc_txn.sharded_arena_free_txn(
+        cfg, num_shards, kind, family, mem, ctl, offsets_words,
+        sizes_bytes, mask, interpret=_interpret())
+
+
 def count_pallas_calls(closed_jaxpr) -> int:
     """Number of ``pallas_call`` eqns anywhere in a jaxpr (descending
     into sub-jaxprs in eqn params).  The single source of truth for the

@@ -29,6 +29,11 @@ def main(argv=None):
                     help="Pallas kernel lowering (whole-arena refs vs "
                          "region-blocked; DESIGN.md §8) — the active "
                          "one is reported in the engine stats")
+    ap.add_argument("--num-shards", type=int, default=1,
+                    help="shard the KV page allocator into N "
+                         "independent arenas with overflow routing "
+                         "(core/shards.py, DESIGN.md §9); per-shard "
+                         "occupancy lands in the engine stats")
     args = ap.parse_args(argv)
 
     import jax
@@ -45,7 +50,8 @@ def main(argv=None):
     eng = ServingEngine(model, params, max_batch=args.max_batch,
                         max_seq=args.max_seq,
                         alloc_backend=args.alloc_backend,
-                        alloc_lowering=args.alloc_lowering)
+                        alloc_lowering=args.alloc_lowering,
+                        num_shards=args.num_shards)
 
     rng = np.random.default_rng(args.seed)
     for _ in range(args.requests):

@@ -110,7 +110,7 @@ def abstract_paged_kv(num_layers, num_pages, batch, max_pages_per_seq,
 
 
 def make_kv_allocator(num_pages: int, backend: str = "jnp",
-                      lowering: str = "auto"):
+                      lowering: str = "auto", num_shards: int = 1):
     """Ouroboros instance managing the page-id space.
 
     Each logical page is one 256 B region of a single-size-class heap;
@@ -125,21 +125,42 @@ def make_kv_allocator(num_pages: int, backend: str = "jnp",
     lowerings are bit-identical, so serving behaviour is invariant to
     both.
 
+    ``num_shards > 1`` partitions the page space into that many
+    independent arenas (core/shards.py, DESIGN.md §9): the heap is
+    sized so EACH shard carries the per-shard page share plus its own
+    vl segment overhead, the engine routes each sequence's grants to
+    ``slot % num_shards`` via ``shard_hint``, and exhausted shards
+    overflow to neighbors — page ids stay global either way.
+
     Returns (ouro, words_per_page, physical_pages).  Queue segments live
     in the same heap (the ouroboros property), so granted ids are a
     subset of [0, physical_pages) that skips segment-occupied chunks —
     size the KV page array with ``physical_pages``, never ``num_pages``
-    (ids beyond the array would silently drop KV writes)."""
+    (ids beyond the array would silently drop KV writes).
+
+    >>> import jax.numpy as jnp
+    >>> from repro.paged.kv_cache import make_kv_allocator
+    >>> ouro, wpp, physical = make_kv_allocator(64)
+    >>> state = ouro.init()
+    >>> sizes = jnp.full(4, 256, jnp.int32)     # four page grants
+    >>> state, offs = ouro.alloc(state, sizes, jnp.ones(4, bool))
+    >>> page_ids = [int(o) // wpp for o in offs]
+    >>> all(0 <= p < physical for p in page_ids)
+    True
+    """
     chunk = 4096
     pages_per_chunk = chunk // 256
-    data_chunks = -(-num_pages // pages_per_chunk)
+    pages_per_shard = -(-num_pages // num_shards)
+    data_chunks = -(-pages_per_shard // pages_per_chunk)
     # vl segments: one per size class (5) + chunk-queue chain growth
-    # (1023 ids per segment) + headroom.
+    # (1023 ids per segment) + headroom — per shard.
     seg_chunks = 5 + data_chunks // 1023 + 3
-    cfg = HeapConfig(total_bytes=(data_chunks + seg_chunks) * chunk,
-                     chunk_bytes=chunk, min_page_bytes=256)
+    cfg = HeapConfig(
+        total_bytes=num_shards * (data_chunks + seg_chunks) * chunk,
+        chunk_bytes=chunk, min_page_bytes=256)
     physical_pages = cfg.total_words // 64
-    return Ouroboros(cfg, "vl_chunk", backend, lowering), 64, physical_pages
+    return (Ouroboros(cfg, "vl_chunk", backend, lowering,
+                      num_shards=num_shards), 64, physical_pages)
 
 
 def _quant(x):

@@ -40,7 +40,7 @@ class ServingEngine:
                  max_seq: int = 512, num_pages: Optional[int] = None,
                  kv_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
                  sample: str = "greedy", alloc_backend: str = "jnp",
-                 alloc_lowering: str = "auto"):
+                 alloc_lowering: str = "auto", num_shards: int = 1):
         # Validate the allocator knobs before any expensive setup: a
         # typo like alloc_backend="palas" must fail here with the menu
         # of choices, not surface later (or worse, quietly behave like
@@ -54,6 +54,9 @@ class ServingEngine:
             raise ValueError(
                 f"unknown alloc_lowering {alloc_lowering!r}; pick from "
                 f"{LOWERINGS}")
+        if not isinstance(num_shards, int) or num_shards < 1:
+            raise ValueError(
+                f"num_shards must be a positive int, got {num_shards!r}")
         cfg = model.cfg
         self.model, self.params, self.cfg = model, params, cfg
         self.max_batch, self.max_seq = max_batch, max_seq
@@ -67,11 +70,20 @@ class ServingEngine:
         # one word image + one control block); alloc_backend="pallas"
         # makes every bulk grant/release below a single fused kernel
         # launch (vl segment walk included), bit-identical to "jnp".
+        # num_shards > 1 splits the page space into independent arenas
+        # (core/shards.py): each sequence slot homes on slot % S, and
+        # exhausted shards overflow to neighbors inside the same single
+        # kernel launch.
+        self.num_shards = num_shards
         self.ouro, self.wpp, physical_pages = KV.make_kv_allocator(
             self.num_pages, backend=alloc_backend,
-            lowering=alloc_lowering)
+            lowering=alloc_lowering, num_shards=num_shards)
         self.alloc_state = self.ouro.init()
         self.page_bytes = 256  # logical bytes per page in the heap
+        self._shard_words = (self.ouro.layout.shard_words
+                             if num_shards > 1
+                             else self.ouro.cfg.total_words)
+        self._shard_pages = np.zeros(num_shards, np.int64)  # live/shard
 
         # the page array is sized by the heap's PHYSICAL page space:
         # segment-occupied chunks make granted ids sparse in it.
@@ -90,16 +102,24 @@ class ServingEngine:
             lambda p, t, c: model.decode_step(p, t, c,
                                               dtype=compute_dtype))
         from repro.kernels.ops import resolve_lowering
+        mem_words = int(np.prod(self.alloc_state.mem.shape))
+        ctl_words = int(np.prod(self.alloc_state.ctl.shape))
         self.stats = {"allocs": 0, "frees": 0, "steps": 0,
                       "alloc_failures": 0,
                       # observability: device words the arena occupies,
                       # and which transaction path actually runs
-                      "arena_mem_words": int(self.alloc_state.mem.shape[0]),
-                      "arena_ctl_words": int(self.alloc_state.ctl.shape[0]),
+                      "arena_mem_words": mem_words,
+                      "arena_ctl_words": ctl_words,
                       "alloc_backend": alloc_backend,
                       "alloc_lowering": (resolve_lowering(alloc_lowering)
                                          if alloc_backend == "pallas"
-                                         else "none")}
+                                         else "none"),
+                      # sharding observability: live pages per shard and
+                      # how many grants landed off their home shard
+                      # (the overflow walk at work)
+                      "num_shards": num_shards,
+                      "shard_pages_live": [0] * num_shards,
+                      "alloc_overflows": 0}
 
     # ---- request lifecycle -------------------------------------------------
     def submit(self, prompt, max_new_tokens=32, eos_id=None) -> int:
@@ -118,18 +138,37 @@ class ServingEngine:
         else:
             self.caches = self.caches._replace(kv=kv)
 
-    def _bulk_alloc(self, n_pages: int) -> List[int]:
-        """One allocator transaction for up to n_pages new pages."""
+    def _bulk_alloc(self, n_pages: int, slot: int = 0) -> List[int]:
+        """One allocator transaction for up to n_pages new pages.
+        Sharded allocators home the grants on ``slot % num_shards``
+        (overflowing to neighbor shards when that shard is full)."""
         lanes = max(self.max_batch * 2, n_pages)
         sizes = jnp.full(lanes, self.page_bytes, jnp.int32)
         mask = jnp.arange(lanes) < n_pages
-        self.alloc_state, offs = self.ouro.alloc(self.alloc_state, sizes,
-                                                 mask)
+        home = slot % self.num_shards
+        if self.num_shards > 1:
+            hint = jnp.full(lanes, home, jnp.int32)
+            self.alloc_state, offs = self.ouro.alloc(
+                self.alloc_state, sizes, mask, shard_hint=hint)
+        else:
+            self.alloc_state, offs = self.ouro.alloc(self.alloc_state,
+                                                     sizes, mask)
         offs = np.asarray(offs[:n_pages])
         ok = offs >= 0
         self.stats["allocs"] += int(ok.sum())
         self.stats["alloc_failures"] += int((~ok).sum())
+        shard = self._note_shard_pages(offs[ok], +1)
+        self.stats["alloc_overflows"] += int((shard != home).sum())
         return [int(o) // self.wpp if o >= 0 else -1 for o in offs]
+
+    def _note_shard_pages(self, offs, delta: int):
+        """Update per-shard live-page occupancy for granted/freed word
+        offsets; returns their owning shards."""
+        shard = offs // self._shard_words
+        np.add.at(self._shard_pages, shard, delta)
+        self.stats["shard_pages_live"] = [int(x) for x in
+                                          self._shard_pages]
+        return shard
 
     def _bulk_free(self, pages: List[int]):
         if not pages:
@@ -142,6 +181,7 @@ class ServingEngine:
         self.alloc_state = self.ouro.free(
             self.alloc_state, jnp.asarray(offs), sizes, mask)
         self.stats["frees"] += len(pages)
+        self._note_shard_pages(offs[offs >= 0], -1)
 
     def _map_pages(self, slot: int, upto_tokens: int):
         """Grow slot's page table to cover ``upto_tokens`` positions."""
@@ -151,7 +191,7 @@ class ServingEngine:
         missing = need - len(self.slot_pages[slot])
         if missing <= 0:
             return True
-        got = self._bulk_alloc(missing)
+        got = self._bulk_alloc(missing, slot=slot)
         if any(g < 0 for g in got):
             self._bulk_free([g for g in got if g >= 0])
             return False

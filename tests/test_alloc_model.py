@@ -47,10 +47,20 @@ IMPLS = (("jnp", "auto"), ("pallas", "whole"), ("pallas", "blocked"))
 
 
 class RefModel:
-    """Pure-Python reference allocator model (host truth)."""
+    """Pure-Python reference allocator model (host truth).
 
-    def __init__(self, cfg: HeapConfig):
+    ``num_shards > 1`` additionally asserts SHARD containment: every
+    grant lies entirely inside one shard's heap slice (offsets are
+    global — shard · shard_words + local — so a page straddling a
+    shard boundary would corrupt a neighbor's words), and alignment /
+    chunk containment hold for the shard-LOCAL offset.  Non-overlap is
+    asserted on global offsets, so it also guards cross-shard overlap:
+    two shards handing out the same global word would trip it."""
+
+    def __init__(self, cfg: HeapConfig, num_shards: int = 1):
         self.cfg = cfg
+        self.num_shards = num_shards
+        self.shard_words = cfg.total_words // num_shards
         self.live = {}  # offset -> (size_bytes, class, page_words)
 
     def on_alloc(self, offs, sizes):
@@ -61,15 +71,22 @@ class RefModel:
             o, s = int(o), int(s)
             c = cfg.size_to_class(s)
             pw = cfg.page_words(c)
-            # containment: in-heap, class-aligned, chunk-contained
+            # containment: in-heap, shard-contained, class-aligned
+            # (local offset), chunk-contained
             assert 0 <= o < cfg.total_words, (o, s)
-            assert o % pw == 0, f"offset {o} not aligned to class {c}"
+            assert o // self.shard_words == \
+                (o + pw - 1) // self.shard_words, \
+                f"page at {o} crosses a shard boundary"
+            local = o % self.shard_words
+            assert local % pw == 0, \
+                f"offset {o} (local {local}) not aligned to class {c}"
             assert o // cfg.words_per_chunk == \
                 (o + pw - 1) // cfg.words_per_chunk, \
                 f"page at {o} crosses a chunk boundary"
             # uniqueness: never granted twice while live
             assert o not in self.live, f"offset {o} double-granted"
-            # non-overlap against every live page
+            # non-overlap against every live page (global offsets, so
+            # cross-shard overlap is caught too)
             for lo, (_, _, lpw) in self.live.items():
                 assert o + pw <= lo or lo + lpw <= o, \
                     f"grant [{o},{o + pw}) overlaps live [{lo},{lo + lpw})"
@@ -80,8 +97,9 @@ class RefModel:
             self.live.pop(int(o), None)
 
 
-def _mk(variant):
-    return [Ouroboros(CFG, variant, backend, lowering)
+def _mk(variant, num_shards: int = 1):
+    return [Ouroboros(CFG, variant, backend, lowering,
+                      num_shards=num_shards)
             for backend, lowering in IMPLS]
 
 
@@ -96,13 +114,13 @@ def _lockstep_alloc(impls, states, sizes, mask):
     return states, offs[0]
 
 
-def check_model_trace(variant, ops, seed):
+def check_model_trace(variant, ops, seed, num_shards: int = 1):
     """Replay ``ops`` through all implementations, assert the model
     invariants and cross-implementation grant equality throughout."""
     rng = np.random.default_rng(seed)
-    impls = _mk(variant)
+    impls = _mk(variant, num_shards)
     states = [o.init() for o in impls]
-    model = RefModel(CFG)
+    model = RefModel(CFG, num_shards)
 
     for kind, sizes in ops:
         k = min(len(sizes), N)
@@ -188,3 +206,17 @@ def test_alloc_model_fallback(variant, seed):
     runs with or without hypothesis installed."""
     rng = np.random.default_rng(seed)
     check_model_trace(variant, _random_ops(rng), seed)
+
+
+@pytest.mark.compiled_lowering
+@pytest.mark.parametrize("variant", ("page", "chunk", "va_page",
+                                     "vl_chunk"))
+def test_alloc_model_sharded(variant):
+    """num_shards=4: the stateful invariants extended with shard
+    containment (no grant straddles a shard boundary; local offsets
+    stay class-aligned) and cross-shard non-overlap (global offsets are
+    compared across every live grant, whichever shard granted them),
+    with all three implementations in lockstep."""
+    seed = 3
+    rng = np.random.default_rng(seed)
+    check_model_trace(variant, _random_ops(rng), seed, num_shards=4)

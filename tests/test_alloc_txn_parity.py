@@ -25,6 +25,14 @@ Beyond lockstep equality this file pins the arena-era contracts:
   - ``init`` state is backend-free, so a live heap can switch backends
     mid-stream and stay on the oracle's trajectory.
 
+The sharded allocator (core/shards.py, DESIGN.md §9) extends the
+matrix: with ``num_shards=4`` every variant is additionally held
+bit-identical — offsets, failure lanes, every word of every shard —
+to an explicit ``SerialShardOracle`` built from four independent
+single-shard jnp allocators replayed in the documented
+attempt-major/shard-minor schedule, and the one-kernel property is
+asserted for the sharded grids of BOTH lowerings.
+
 ``--runslow`` unlocks the long replays (more ops, more seeds, both
 configs × all six variants) that the scheduled CI job runs nightly.
 """
@@ -232,6 +240,304 @@ def test_backends_share_init_state():
     st = oj.free(st, offs, sizes, mask)    # jnp txn on pallas-built state
     st2, offs2 = op.alloc(st, sizes, mask)
     assert (np.asarray(offs2) >= 0).all()
+
+
+# ---- sharded allocator: the serial single-shard oracle replay -------------
+#
+# DESIGN.md §9's correctness contract: a sharded transaction behaves
+# exactly as if the wavefront were replayed serially through S
+# independent single-arena allocators — attempt-major, shard-minor,
+# still-unserved lanes retrying on neighbor shards.  The class below IS
+# that replay, built from S *single-shard* jnp Ouroboros instances (the
+# oracle of everything above), and the sharded implementations — jnp,
+# pallas/whole, pallas/blocked — must match it bit for bit: offsets,
+# failure lanes, and every per-shard arena word.
+
+SHARDS = 4
+SHARD_SEEDS = (0,)
+SHARD_OPS = 5
+
+
+class SerialShardOracle:
+    """S independent single-shard jnp allocators replayed serially."""
+
+    def __init__(self, cfg, variant, num_shards, walk):
+        from repro.core import shards
+        self.S, self.walk = num_shards, walk
+        self.scfg = shards.shard_config(cfg, num_shards)
+        self.Ws = self.scfg.total_words
+        self.ouro = Ouroboros(self.scfg, variant)          # jnp oracle
+        self.states = [self.ouro.init() for _ in range(num_shards)]
+
+    def alloc(self, sizes, mask, home):
+        n = int(sizes.shape[0])
+        offs = np.full(n, -1, np.int64)
+        mask, home = np.asarray(mask), np.asarray(home)
+        for a in range(self.walk + 1):
+            for s in range(self.S):
+                sel = mask & ((home + a) % self.S == s) & (offs < 0)
+                st, local = self.ouro.alloc(self.states[s], sizes,
+                                            jnp.asarray(sel))
+                self.states[s] = st
+                local = np.asarray(local)
+                offs = np.where(sel & (local >= 0),
+                                s * self.Ws + local, offs)
+        return offs.astype(np.int32)
+
+    def free(self, offsets, sizes, mask):
+        offsets, mask = np.asarray(offsets), np.asarray(mask)
+        owner = np.where(offsets >= 0, offsets // self.Ws, -1)
+        for s in range(self.S):
+            sel = mask & (owner == s)
+            local = np.where(sel, offsets - s * self.Ws, -1)
+            self.states[s] = self.ouro.free(
+                self.states[s], jnp.asarray(local.astype(np.int32)),
+                sizes, jnp.asarray(sel))
+
+    def write(self, offsets, sizes, tags):
+        """Per-shard write_pattern with shard-local offsets — the
+        word-for-word equivalent of the sharded global-heap write."""
+        offsets = np.asarray(offsets)
+        owner = np.where(offsets >= 0, offsets // self.Ws, -1)
+        for s in range(self.S):
+            local = np.where(owner == s, offsets - s * self.Ws,
+                             -1).astype(np.int32)
+            self.states[s] = self.ouro.write_pattern(
+                self.states[s], jnp.asarray(local), sizes, tags)
+
+    def check(self, offsets, sizes, tags):
+        offsets = np.asarray(offsets)
+        owner = np.where(offsets >= 0, offsets // self.Ws, -1)
+        ok = np.zeros(offsets.shape[0], bool)
+        for s in range(self.S):
+            local = np.where(owner == s, offsets - s * self.Ws,
+                             -1).astype(np.int32)
+            ok |= np.asarray(self.ouro.check_pattern(
+                self.states[s], jnp.asarray(local), sizes, tags))
+        return ok
+
+    def stacked(self):
+        """(mem, ctl) stacked like shards.ShardedArena."""
+        return (np.stack([np.asarray(st.mem) for st in self.states]),
+                np.stack([np.asarray(st.ctl) for st in self.states]))
+
+
+def _assert_matches_serial(variant, tag, serial, states):
+    smem, sctl = serial.stacked()
+    for (lbl, st) in states:
+        np.testing.assert_array_equal(
+            smem, np.asarray(st.mem),
+            err_msg=f"{variant}/{lbl}: mem diverged from the serial "
+                    f"single-shard oracle replay at {tag}")
+        np.testing.assert_array_equal(
+            sctl, np.asarray(st.ctl),
+            err_msg=f"{variant}/{lbl}: ctl diverged from the serial "
+                    f"single-shard oracle replay at {tag}")
+
+
+def _replay_sharded(variant, seed, ops=SHARD_OPS):
+    """Lockstep replay with num_shards=4: sharded jnp vs both Pallas
+    lowerings vs the serial single-shard oracle replay."""
+    from repro.core import shards
+    rng = np.random.default_rng(seed)
+    impls = [("jnp", Ouroboros(CFG, variant, num_shards=SHARDS)),
+             ("pallas/whole", Ouroboros(CFG, variant, backend="pallas",
+                                        lowering="whole",
+                                        num_shards=SHARDS)),
+             ("pallas/blocked", Ouroboros(CFG, variant,
+                                          backend="pallas",
+                                          lowering="blocked",
+                                          num_shards=SHARDS))]
+    serial = SerialShardOracle(CFG, variant, SHARDS, impls[0][1].walk)
+    states = [(lbl, o.init()) for lbl, o in impls]
+    home = np.asarray(shards.home_shards(N, SHARDS))  # the hashed homes
+
+    live = []
+    tagc = 0
+    for step in range(ops):
+        kind = rng.choice(["alloc", "free"]) if live else "alloc"
+        if kind == "alloc":
+            sizes = jnp.asarray(rng.choice(SIZES, N), jnp.int32)
+            mask = jnp.asarray(rng.random(N) < 0.85)
+            want = serial.alloc(sizes, mask, home)
+            new = []
+            for (lbl, o), (_, st) in zip(impls, states):
+                st, offs = o.alloc(st, sizes, mask)
+                np.testing.assert_array_equal(
+                    want, np.asarray(offs),
+                    err_msg=f"{variant}/{lbl}: sharded offsets diverged "
+                            f"from the serial replay at op {step}")
+                new.append((lbl, st))
+            states = new
+            # write/check through the GLOBAL heap view: the sharded
+            # write_pattern must land the same words as the per-shard
+            # writes of the serial oracle
+            tags = jnp.arange(tagc, tagc + N, dtype=jnp.int32)
+            tagc += N
+            so = jnp.asarray(want, jnp.int32)
+            serial.write(want, sizes, tags)
+            states = [(lbl, o.write_pattern(st, so, sizes, tags))
+                      for (lbl, o), (_, st) in zip(impls, states)]
+            cj = serial.check(want, sizes, tags)
+            for (lbl, o), (_, st) in zip(impls, states):
+                cp = np.asarray(o.check_pattern(st, so, sizes, tags))
+                np.testing.assert_array_equal(
+                    cj, cp, err_msg=f"{variant}/{lbl}: integrity "
+                                    f"verdicts diverged at op {step}")
+            live.extend((int(o), int(s))
+                        for o, s in zip(want, np.asarray(sizes))
+                        if o >= 0)
+        else:
+            k = min(len(live), int(rng.integers(1, N + 1)))
+            pick = rng.choice(len(live), k, replace=False)
+            drop = [live[i] for i in pick]
+            live = [x for i, x in enumerate(live) if i not in set(pick)]
+            fo = np.full(N, -1, np.int32)
+            fs = np.zeros(N, np.int32)
+            fo[:k] = [o for o, _ in drop]
+            fs[:k] = [s for _, s in drop]
+            fm = jnp.asarray(fo >= 0)
+            serial.free(fo, jnp.asarray(fs), fm)
+            states = [(lbl, o.free(st, jnp.asarray(fo), jnp.asarray(fs),
+                                   fm))
+                      for (lbl, o), (_, st) in zip(impls, states)]
+        _assert_matches_serial(variant, f"op {step}", serial, states)
+    # homes must actually spread over the shards, or the walk schedule
+    # was never multi-shard to begin with
+    assert len(set(home.tolist())) > 1
+
+
+@pytest.mark.compiled_lowering
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_sharded_bit_identical_to_serial_oracle(variant):
+    """num_shards=4: sharded jnp, whole, and blocked all replay the
+    serial single-shard oracle schedule bit for bit (offsets, failure
+    lanes, every word of every shard)."""
+    for seed in SHARD_SEEDS:
+        _replay_sharded(variant, seed)
+
+
+@pytest.mark.compiled_lowering
+@pytest.mark.parametrize("variant", ("page", "va_page", "vl_chunk"))
+def test_sharded_pinned_fast_path_matches_serial(variant):
+    """Static shard_hint + overflow_walk=0: the pinned fast path (only
+    the hinted shard enters the kernel) stays on the serial-replay
+    trajectory with a constant home and no walk."""
+    from repro.core import shards
+    hint = 2
+    # 16 chunks per shard: enough for vl_chunk's init-time queue
+    # segments (one per class) to leave data chunks in the pool
+    pin_cfg = HeapConfig(total_bytes=1 << 17, chunk_bytes=1 << 11,
+                         min_page_bytes=16)
+    impls = [("jnp", Ouroboros(pin_cfg, variant, num_shards=SHARDS,
+                               overflow_walk=0)),
+             ("pallas/whole", Ouroboros(pin_cfg, variant,
+                                        backend="pallas",
+                                        lowering="whole",
+                                        num_shards=SHARDS,
+                                        overflow_walk=0)),
+             ("pallas/blocked", Ouroboros(pin_cfg, variant,
+                                          backend="pallas",
+                                          lowering="blocked",
+                                          num_shards=SHARDS,
+                                          overflow_walk=0))]
+    serial = SerialShardOracle(pin_cfg, variant, SHARDS, walk=0)
+    states = [(lbl, o.init()) for lbl, o in impls]
+    home = np.full(N, hint, np.int64)
+    sizes = jnp.asarray([64, 256, 64, 1000] * (N // 4), jnp.int32)
+    mask = jnp.ones(N, bool)
+
+    want = serial.alloc(sizes, mask, home)
+    granted = want >= 0
+    # partial grants are fine (per-shard inventories are small) — the
+    # contract under test is serial-replay equality + shard residency
+    assert granted.any()
+    Ws = shards.shard_config(pin_cfg, SHARDS).total_words
+    assert set((want[granted] // Ws).tolist()) == {hint}, \
+        "pinned grants must come from the hinted shard"
+    new = []
+    for (lbl, o), (_, st) in zip(impls, states):
+        st, offs = o.alloc(st, sizes, mask, shard_hint=hint)
+        np.testing.assert_array_equal(want, np.asarray(offs),
+                                      err_msg=f"{variant}/{lbl}")
+        new.append((lbl, st))
+    states = new
+    _assert_matches_serial(variant, "pinned-alloc", serial, states)
+
+    serial.free(want, sizes, mask)
+    states = [(lbl, o.free(st, jnp.asarray(want), sizes, mask,
+                           shard_hint=hint))
+              for (lbl, o), (_, st) in zip(impls, states)]
+    _assert_matches_serial(variant, "pinned-free", serial, states)
+
+
+@pytest.mark.compiled_lowering
+@pytest.mark.parametrize("lowering", LOWERINGS)
+@pytest.mark.parametrize("variant", ("page", "chunk", "va_page",
+                                     "vl_chunk"))
+def test_sharded_single_pallas_call_per_txn(variant, lowering):
+    """The one-kernel property survives sharding: with num_shards=4 the
+    (attempt, shard) schedule rides the grid of ONE pallas_call for
+    alloc and free, under BOTH lowerings (jnp still lowers to zero)."""
+    sizes = jnp.full(N, 64, jnp.int32)
+    mask = jnp.ones(N, bool)
+    offs = jnp.full(N, -1, jnp.int32)
+    for backend, want in (("pallas", 1), ("jnp", 0)):
+        o = Ouroboros(CFG, variant, backend, lowering,
+                      num_shards=SHARDS)
+        st = o.init()
+        ja = jax.make_jaxpr(lambda s, z, m: o.alloc(s, z, m))(
+            st, sizes, mask)
+        jf = jax.make_jaxpr(lambda s, x, z, m: o.free(s, x, z, m))(
+            st, offs, sizes, mask)
+        assert _count_pallas_calls(ja) == want, (
+            f"{variant}/{backend}/shards: alloc is not a single fused "
+            f"kernel")
+        assert _count_pallas_calls(jf) == want, (
+            f"{variant}/{backend}/shards: free is not a single fused "
+            f"kernel")
+
+
+def test_shard_knobs_validated():
+    from repro.core import shards
+    with pytest.raises(ValueError, match="num_chunks"):
+        # 32 chunks don't divide by 5
+        Ouroboros(CFG, "page", num_shards=5)
+    with pytest.raises(ValueError, match="overflow_walk"):
+        Ouroboros(CFG, "page", num_shards=4, overflow_walk=-1)
+    with pytest.raises(ValueError, match="overflow_walk"):
+        # an ignored knob must not be silently accepted
+        Ouroboros(CFG, "page", overflow_walk=2)
+    with pytest.raises(ValueError, match="shard_hint"):
+        o = Ouroboros(CFG, "page")
+        o.alloc(o.init(), jnp.full(4, 64, jnp.int32),
+                jnp.ones(4, bool), shard_hint=0)
+    with pytest.raises(ValueError, match="shard_hint"):
+        shards.home_shards(8, 4, jnp.zeros(5, jnp.int32))
+    # walk resolution: None = all neighbors, ints clamp to S-1
+    assert shards.resolve_walk(4, None) == 3
+    assert shards.resolve_walk(4, 99) == 3
+    assert shards.resolve_walk(4, 1) == 1
+
+
+def test_numpy_integer_shard_hint_pins_like_python_int():
+    """np.int32/np.int64 hints (e.g. an element of a hints array) must
+    behave exactly like a Python int — including taking the pinned
+    fast path when the walk is off."""
+    from repro.core import shards
+    o = Ouroboros(CFG, "page", num_shards=SHARDS, overflow_walk=0)
+    sizes = jnp.full(4, 64, jnp.int32)
+    mask = jnp.ones(4, bool)
+    st_py, offs_py = o.alloc(o.init(), sizes, mask, shard_hint=2)
+    st_np, offs_np = o.alloc(o.init(), sizes, mask,
+                             shard_hint=np.int32(2))
+    np.testing.assert_array_equal(np.asarray(offs_py),
+                                  np.asarray(offs_np))
+    _assert_state_equal("page/np-hint", "pinned", st_py, st_np)
+    assert shards.static_hint(np.int64(3)) == 3
+    assert shards.static_hint(3) == 3
+    assert shards.static_hint(None) is None
+    assert shards.static_hint(jnp.zeros(4, jnp.int32)) is None
 
 
 @pytest.mark.compiled_lowering

@@ -84,3 +84,65 @@ def test_split_join_roundtrip():
     parts = arena.split(lay, mem)
     assert set(parts) == {r.name for r in lay.regions}
     assert (arena.join(lay, parts) == mem).all()
+
+
+# ---- sharded layout golden (DESIGN.md §9) ---------------------------------
+
+from repro.core import shards
+
+SHARD_GOLDEN = pathlib.Path(__file__).parent / "golden" / "shard_layout.txt"
+SHARDS = 4
+
+
+def _render_sharded() -> str:
+    return "\n".join(
+        shards.layout(CFG, SHARDS, kind, family).describe(blocks=True)
+        for kind in arena.KINDS for family in arena.QUEUE_FAMILIES) + "\n"
+
+
+def test_shard_layout_matches_golden():
+    """The sharded layout rendering — per-shard word table, global
+    offset rule, routing line — is pinned like the single-arena one.
+    Regenerate intentionally with:
+
+        PYTHONPATH=src python -c "
+        from repro.core import HeapConfig, shards, arena
+        cfg = HeapConfig(total_bytes=1 << 16, chunk_bytes=1 << 11,
+                         min_page_bytes=16)
+        print('\\n'.join(shards.layout(cfg, 4, k, f).describe(blocks=True)
+                         for k in arena.KINDS
+                         for f in arena.QUEUE_FAMILIES))
+        " > tests/golden/shard_layout.txt
+    """
+    want = SHARD_GOLDEN.read_text()
+    got = _render_sharded()
+    assert got == want, (
+        "sharded arena layout drifted from the golden snapshot "
+        "(tests/golden/shard_layout.txt).  If intentional, regenerate "
+        "(see docstring) and call the diff out in the PR — sharded "
+        "arenas serialized under the old layout will NOT survive it.")
+
+
+def test_shard_layout_embeds_per_shard_arena_layout():
+    """A shard's layout IS the single-arena layout of the per-shard
+    config — the property that lets arena.split/join and both kernel
+    lowerings run per shard unchanged."""
+    for kind in arena.KINDS:
+        for family in arena.QUEUE_FAMILIES:
+            slay = shards.layout(CFG, SHARDS, kind, family)
+            scfg = shards.shard_config(CFG, SHARDS)
+            assert slay.shard is arena.layout(scfg, kind, family)
+            assert slay.mem_words == slay.shard.mem_words
+            assert slay.shard_words * SHARDS == CFG.total_words
+
+
+def test_shard_split_join_roundtrip():
+    """shards.split_regions/join_regions (the sharded blocked
+    wrapper's mem plumbing) is lossless over the stacked image."""
+    import jax.numpy as jnp
+    slay = shards.layout(CFG, SHARDS, "chunk", "vl")
+    mem = jnp.arange(SHARDS * slay.mem_words,
+                     dtype=jnp.int32).reshape(SHARDS, slay.mem_words)
+    parts = shards.split_regions(slay, mem)
+    assert set(parts) == {r.name for r in slay.shard.regions}
+    assert (shards.join_regions(slay, parts) == mem).all()

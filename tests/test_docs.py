@@ -1,0 +1,108 @@
+"""Documentation lockdown: public-API doctests + DESIGN.md drift.
+
+Two failure modes this file exists to catch:
+
+1. **Dead examples** — the docstring examples on the public API
+   surface (``Ouroboros``, ``Arena``/``ArenaLayout``, ``ShardedArena``
+   and friends, ``transactions.alloc/free``,
+   ``kv_cache.make_kv_allocator``) are executable doctests; this
+   suite runs them, so a signature or behaviour change that breaks an
+   example fails CI (the docs job also runs them via
+   ``pytest --doctest-modules``).
+
+2. **Doc drift** — DESIGN.md §7–§9 embed offset/blocking tables that
+   are RENDERED from the live layout (``ArenaLayout.describe()`` /
+   ``ShardLayout.describe()`` / ``Region.blocking``).  test_heap.py
+   pins §7; the checks here extend the same mechanism to §8's
+   region-blocking table and §9's sharded tables, so none of the
+   three sections can silently diverge from the code.
+"""
+import doctest
+import importlib
+import pathlib
+import re
+
+import pytest
+
+from repro.core import HeapConfig, arena, shards
+
+DOC = pathlib.Path(__file__).resolve().parent.parent / "DESIGN.md"
+CFG = HeapConfig(total_bytes=1 << 16, chunk_bytes=1 << 11,
+                 min_page_bytes=16)
+
+# The documented public API surface.  Every module here must carry at
+# least one runnable example — an empty doctest run means the usage
+# examples were deleted, which is itself a docs regression.
+DOCTEST_MODULES = (
+    "repro.core.ouroboros",
+    "repro.core.arena",
+    "repro.core.shards",
+    "repro.core.transactions",
+    "repro.paged.kv_cache",
+)
+
+
+@pytest.mark.parametrize("modname", DOCTEST_MODULES)
+def test_public_api_doctests(modname):
+    mod = importlib.import_module(modname)
+    res = doctest.testmod(mod, verbose=False)
+    assert res.attempted > 0, (
+        f"{modname} lost its runnable usage examples (no doctests "
+        f"collected)")
+    assert res.failed == 0, (
+        f"{modname}: {res.failed}/{res.attempted} doctest examples "
+        f"failed — run `pytest --doctest-modules src/{modname.replace('.', '/')}.py` "
+        f"for details")
+
+
+# ---- DESIGN.md §8: the region-blocking table ------------------------------
+
+def test_design_s8_blocking_table_matches_live_policies():
+    """Every (region, blocking) pair in the live layouts must appear
+    on the §8 table row for that blocking class — so changing a
+    ``Region.blocking`` without updating DESIGN.md §8 fails here."""
+    doc = DOC.read_text()
+    sec = doc.split("## §8")[1].split("\n## §")[0]
+    rows = {}
+    for m in re.finditer(r"\| `(row|resident|hbm|untouched)`[^\n]*", sec):
+        rows[m.group(1)] = m.group(0)
+    live = {}
+    for kind in arena.KINDS:
+        for family in arena.QUEUE_FAMILIES:
+            for r in arena.layout(CFG, kind, family).regions:
+                live.setdefault(r.blocking, set()).add(r.name)
+    assert set(live) <= set(rows), (
+        f"DESIGN.md §8 table lost rows: {set(live) - set(rows)}")
+    for blocking, names in live.items():
+        for nm in sorted(names):
+            assert f"`{nm}`" in rows[blocking], (
+                f"DESIGN.md §8 drifted: region {nm!r} is "
+                f"{blocking!r}-blocked in the live layout but absent "
+                f"from that table row")
+
+
+# ---- DESIGN.md §9: the sharded layout tables ------------------------------
+
+def test_design_s9_shard_tables_match_live_layout():
+    """§9's example tables are ``ShardLayout.describe()`` renderings;
+    re-render and require the header/offset lines verbatim, exactly as
+    test_heap.py pins §7 to ``ArenaLayout.describe()``."""
+    doc = DOC.read_text()
+    for kind, family in (("page", "ring"), ("chunk", "vl")):
+        desc = shards.layout(CFG, 4, kind, family).describe()
+        lines = [ln for ln in desc.splitlines()
+                 if "mem[" in ln or ln.startswith("sharded arena(")
+                 or "global heap offset" in ln]
+        assert lines, "describe() rendering changed shape"
+        for ln in lines:
+            assert ln in doc, (
+                f"DESIGN.md §9 drifted from the live sharded layout: "
+                f"{ln!r}")
+
+
+def test_design_s9_walk_schedule_documented():
+    """The §9 schedule keywords the tests rely on stay documented."""
+    sec = DOC.read_text().split("## §9")[1].split("\n## §")[0]
+    for needle in ("attempt-major", "overflow walk", "shard_hint",
+                   "ONE pallas_call", "serial replay"):
+        assert needle in sec, f"DESIGN.md §9 lost {needle!r}"

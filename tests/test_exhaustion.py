@@ -23,6 +23,13 @@ pins conservation:
   fall inside any grantable page (the data-safety half of the claim);
 - chunk variants restore the control block exactly (compact rebuilds
   counters from zero, as init does).
+
+The sharded cases pin the overflow walk (DESIGN.md §9): with every
+lane homed on one shard, disabling the walk stops the drain at that
+shard's capacity, while the full walk recovers each failed allocation
+from the neighbors — draining all four shards offset-for-offset
+before the allocator ever reports failure — and a full sharded free
+cycle conserves the grantable set.
 """
 import numpy as np
 import pytest
@@ -167,6 +174,102 @@ def test_exhaustion_cycle(variant):
             np.asarray(states[0].ctl), ctl0,
             err_msg=f"{variant}: compact must restore the control "
                     f"block exactly")
+
+
+# ---- sharded exhaustion: the overflow walk drains the neighbors ----------
+
+SHARDS = 4
+# 16 chunks per shard (vl queue segments need one chunk per class at
+# init, leaving data chunks), and a large page size so a shard's
+# inventory drains in a couple of 13-lane batches.
+SH_EX_CFG = HeapConfig(total_bytes=1 << 16, chunk_bytes=1 << 10,
+                       min_page_bytes=64)
+SH_SIZE = 512
+
+
+def _mk_sharded(cfg, variant, overflow_walk=None):
+    return [Ouroboros(cfg, variant, backend, lowering,
+                      num_shards=SHARDS, overflow_walk=overflow_walk)
+            for backend, lowering in IMPLS]
+
+
+def _sharded_alloc(impls, states, sizes, mask, hint, variant, tag):
+    outs = [o.alloc(s, sizes, mask, shard_hint=hint)
+            for o, s in zip(impls, states)]
+    states = [s for s, _ in outs]
+    offs = [np.asarray(x) for _, x in outs]
+    for got, (backend, lowering) in zip(offs[1:], IMPLS[1:]):
+        np.testing.assert_array_equal(
+            offs[0], got,
+            err_msg=f"{variant}: sharded {backend}/{lowering} diverged "
+                    f"at {tag}")
+    _assert_lockstep(variant, tag, states)
+    return states, offs[0]
+
+
+def _sharded_drain(impls, states, hint, variant, tag):
+    """Fixed-size batches, all lanes homed on ``hint``, until two
+    consecutive all-fail batches (as _drain)."""
+    sizes = jnp.full(N, SH_SIZE, jnp.int32)
+    mask = jnp.asarray(np.arange(N) < 13)
+    granted, fails, step = [], 0, 0
+    while fails < 2:
+        states, offs = _sharded_alloc(impls, states, sizes, mask, hint,
+                                      variant, f"{tag}[{step}]")
+        ok = offs >= 0
+        fails = fails + 1 if not ok.any() else 0
+        granted.extend(int(x) for x in offs if x >= 0)
+        step += 1
+        assert step < 300, "exhaustion never reached"
+    return states, granted
+
+
+@pytest.mark.parametrize("variant", ("page", "va_page", "vl_chunk"))
+def test_sharded_overflow_walk_drains_neighbors(variant):
+    """All lanes homed on shard 0.  With overflow_walk=0 (the pinned
+    path) the drain stops at ONE shard's capacity; with the default
+    full walk the same request stream recovers every failed allocation
+    from the neighbor shards — draining all S of them, offset for
+    offset — before reporting failure.  Lockstep across the whole
+    implementation matrix at every step."""
+    from repro.core import shards
+    Ws = shards.shard_config(SH_EX_CFG, SHARDS).total_words
+
+    # 1) pinned: shard-local exhaustion (static hint, walk 0)
+    pinned = _mk_sharded(SH_EX_CFG, variant, overflow_walk=0)
+    states = [o.init() for o in pinned]
+    states, local_granted = _sharded_drain(pinned, states, 0, variant,
+                                           "pinned-drain")
+    assert local_granted, "shard 0 granted nothing"
+    assert set(o // Ws for o in local_granted) == {0}, \
+        "pinned grants must stay on the hinted shard"
+
+    # 2) full walk: the same stream drains all four shards
+    walk = _mk_sharded(SH_EX_CFG, variant)
+    wstates = [o.init() for o in walk]
+    wstates, all_granted = _sharded_drain(walk, wstates, 0, variant,
+                                          "walk-drain")
+    want = sorted(o % Ws + s * Ws for o in local_granted
+                  for s in range(SHARDS))
+    assert sorted(all_granted) == want, (
+        f"{variant}: the overflow walk must recover exactly the "
+        f"neighbors' grantable offsets (every shard's copy of the "
+        f"shard-local drain)")
+
+    # 3) free everything and re-drain: conservation holds across the
+    #    sharded full cycle too
+    for i in range(0, len(all_granted), N):
+        batch = all_granted[i:i + N]
+        fo = np.full(N, -1, np.int32)
+        fo[:len(batch)] = batch
+        fs = np.full(N, SH_SIZE, np.int32)
+        wstates = _free(walk, wstates, fo, fs, variant,
+                        f"walk-free[{i // N}]")
+    wstates, again = _sharded_drain(walk, wstates, 0, variant,
+                                    "walk-redrain")
+    assert sorted(again) == want, (
+        f"{variant}: a full sharded free cycle changed the grantable "
+        f"offset set")
 
 
 @pytest.mark.parametrize("variant", VARIANTS)
