@@ -137,6 +137,24 @@ def pallas_calls_per_txn(variant: str, backend: str = "pallas",
     return count(ja), count(jf)
 
 
+def pallas_calls_per_defrag_wave(variant: str, backend: str = "pallas",
+                                 lowering: str = "auto",
+                                 num_shards: int = 1):
+    """pallas_call launch count for one whole defragmentation wave —
+    plan AND migrate (DESIGN.md §10) — read off the jaxpr (1 for
+    "pallas" under both lowerings and any ``num_shards``, 0 for
+    "jnp")."""
+    from repro.kernels.ops import count_pallas_calls as count
+
+    cfg = HeapConfig(total_bytes=num_shards << 16, chunk_bytes=1 << 11,
+                     min_page_bytes=16)
+    ouro = Ouroboros(cfg, variant, backend, lowering,
+                     num_shards=num_shards)
+    st = ouro.init()
+    return count(jax.make_jaxpr(
+        lambda s: ouro.defrag(s, max_moves=32))(st))
+
+
 def alloc_comparison_cell(variant: str, *, quick: bool = False,
                           lowering: str = "auto"):
     """One jnp-vs-pallas cell per variant for BENCH_alloc.json — the

@@ -1,0 +1,138 @@
+"""Churn-then-defrag reclamation curve (extension — NOT a paper figure).
+
+Drives the ``vl_chunk`` allocator (the serving engine's variant)
+through alloc/free churn rounds that strand free pages inside
+sparsely-occupied bound chunks, sampling the fragmentation gauges
+(``free_words`` / ``largest_free_extent`` / ``frag_ratio``,
+DESIGN.md §10) after each round, then runs ONE ``Ouroboros.defrag``
+wave and samples again — the reclamation curve
+``benchmarks/run.py --alloc-json`` appends to ``BENCH_alloc.json`` as
+the ``frag_defrag`` record.
+
+``run()`` reports the wave itself in the standard figure-row shape:
+``alloc_us_*`` is the migration-wave latency (first call = compile,
+subsequent = steady state), ``n`` the pages migrated per wave, and
+``data_ok`` the write/read-back integrity of surviving allocations
+checked THROUGH the forwarding remap.  The interpret-vs-compiled
+caveat from README applies to pallas cells on CPU.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import HeapConfig, Ouroboros
+from repro.core import defrag as D
+
+VARIANT = "vl_chunk"
+PAGE = 64
+FRAG_HEAP = HeapConfig(total_bytes=1 << 17, chunk_bytes=1 << 11,
+                       min_page_bytes=PAGE)
+N = 64
+
+
+def _churn_round(ouro, state, rng, live):
+    sizes = jnp.full(N, PAGE, jnp.int32)
+    mask = jnp.asarray(rng.random(N) < 0.9)
+    state, offs = ouro.alloc(state, sizes, mask)
+    live.extend(int(o) for o in np.asarray(offs) if o >= 0)
+    # free ~80% of everything currently live, scattered
+    rng.shuffle(live)
+    ndrop = int(len(live) * 0.8)
+    drop, live[:] = live[:ndrop], live[ndrop:]
+    for i in range(0, len(drop), N):
+        b = drop[i:i + N]
+        fo = np.full(N, -1, np.int32)
+        fo[:len(b)] = b
+        state = ouro.free(state, jnp.asarray(fo), sizes,
+                          jnp.asarray(fo >= 0))
+    return state
+
+
+def _gauges(ouro, state):
+    fs = ouro.frag_stats(state)
+    return {"free_words": int(fs["free_words"]),
+            "largest_free_extent": int(fs["largest_free_extent"]),
+            "frag_ratio": round(float(fs["frag_ratio"]), 4)}
+
+
+def reclamation_record(quick: bool = False, backend: str = "jnp",
+                       lowering: str = "auto"):
+    """The churn-then-defrag curve: per-round fragmentation gauges,
+    then the one-wave reclamation deltas."""
+    rounds = 4 if quick else 10
+    ouro = Ouroboros(FRAG_HEAP, VARIANT, backend, lowering)
+    state = ouro.init()
+    rng = np.random.default_rng(0)
+    live = []
+    curve = [dict(round=0, **_gauges(ouro, state))]
+    for r in range(rounds):
+        state = _churn_round(ouro, state, rng, live)
+        curve.append(dict(round=r + 1, **_gauges(ouro, state)))
+    t0 = time.perf_counter()
+    state, fwd = ouro.defrag(state)
+    jax.block_until_ready(state.mem)
+    wave_ms = 1e3 * (time.perf_counter() - t0)
+    after = _gauges(ouro, state)
+    return {
+        "variant": VARIANT, "backend": backend,
+        "rounds": rounds, "curve": curve,
+        "pages_migrated": int((np.asarray(fwd.src) >= 0).sum()),
+        "wave_ms_first": round(wave_ms, 2),
+        "after_defrag": after,
+    }
+
+
+def run(quick: bool = False, backend: str = "jnp",
+        lowering: str = "auto", num_shards: int = 1):
+    """Standard figure rows for the defrag wave itself (churn → wave,
+    iterated; avg-all vs avg-subsequent, paper-§3 style)."""
+    iters = 3 if quick else 6
+    ouro = Ouroboros(FRAG_HEAP, VARIANT, backend, lowering,
+                     num_shards=num_shards)
+    state = ouro.init()
+    rng = np.random.default_rng(1)
+    live = []
+    wave_t, moved, all_ok = [], [], True
+    sizes = jnp.full(N, PAGE, jnp.int32)
+    for it in range(iters):
+        state = _churn_round(ouro, state, rng, live)
+        # tag the survivors, defrag, verify through the remap
+        lanes = max(N, ((len(live) + N - 1) // N) * N)
+        ko = np.full(lanes, -1, np.int32)
+        ko[:len(live)] = live
+        sz = jnp.full(lanes, PAGE, jnp.int32)
+        tags = jnp.arange(it * lanes, (it + 1) * lanes, dtype=jnp.int32)
+        state = ouro.write_pattern(state, jnp.asarray(ko), sz, tags)
+        t0 = time.perf_counter()
+        state, fwd = ouro.defrag(state)
+        jax.block_until_ready(state.mem)
+        wave_t.append(time.perf_counter() - t0)
+        moved.append(int((np.asarray(fwd.src) >= 0).sum()))
+        ko2 = np.asarray(D.forward_offsets(fwd, jnp.asarray(ko)))
+        ok = np.asarray(ouro.check_pattern(state, jnp.asarray(ko2), sz,
+                                           tags))
+        all_ok &= bool(ok[:len(live)].all())
+        live = [int(x) for x in ko2[:len(live)]]
+
+    from repro.kernels.ops import resolve_lowering
+    us = lambda ts: 1e6 * float(np.mean(ts))
+    n_moves = max(1, int(np.mean(moved[1:]) if len(moved) > 1
+                         else moved[0]))
+    return [{
+        "variant": VARIANT, "backend": backend,
+        "lowering": (resolve_lowering(lowering) if backend == "pallas"
+                     else "none"),
+        "num_shards": num_shards,
+        "n": n_moves, "size": PAGE,
+        "alloc_us_all": us(wave_t),
+        "alloc_us_subsequent": us(wave_t[1:]),
+        "free_us_all": 0.0,
+        "free_us_subsequent": 0.0,
+        "per_alloc_ns": 1e9 * float(np.mean(wave_t[1:])) / n_moves,
+        "data_ok": all_ok,
+    }]

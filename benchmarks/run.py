@@ -38,7 +38,7 @@ import os
 import subprocess
 
 FIGS = ["fig1_page", "fig2_chunk", "fig3_va_page", "fig4_vl_page",
-        "fig5_va_chunk", "fig6_vl_chunk"]
+        "fig5_va_chunk", "fig6_vl_chunk", "fig7_frag"]
 
 
 def main(argv=None) -> None:
@@ -110,6 +110,16 @@ def main(argv=None) -> None:
             launches[f"{v}/shards4"] = {"alloc": a, "free": f}
             print(f"launches_per_txn,{v}/pallas/{lowering}/shards4,"
                   f"alloc={a} free={f}", flush=True)
+        # ...and for defragmentation waves: plan + migrate is ONE
+        # launch, sharded or not (DESIGN.md §10)
+        from benchmarks.common import pallas_calls_per_defrag_wave
+        for v, S in (("vl_chunk", 1), ("vl_chunk", 4)):
+            w = pallas_calls_per_defrag_wave(v, "pallas", args.lowering,
+                                             num_shards=S)
+            key = f"{v}/defrag" + (f"/shards{S}" if S > 1 else "")
+            launches[key] = {"wave": w}
+            print(f"launches_per_txn,{key}/pallas/{lowering},wave={w}",
+                  flush=True)
 
         # throughput vs num_shards: the horizontal-scaling record
         # (jnp column — the CPU perf signal; see README)
@@ -123,6 +133,17 @@ def main(argv=None) -> None:
                       f"allocs_per_s={c['allocs_per_s_subsequent']:.0f}",
                       flush=True)
 
+        # churn-then-defrag reclamation curve (benchmarks/fig7_frag.py,
+        # DESIGN.md §10): fragmentation gauges per churn round, then
+        # the one-wave reclamation deltas + wave latency
+        from benchmarks import fig7_frag
+        frag_defrag = fig7_frag.reclamation_record(quick=args.quick)
+        print(f"frag_defrag,{frag_defrag['variant']}/jnp,"
+              f"migrated={frag_defrag['pages_migrated']} "
+              f"wave_ms={frag_defrag['wave_ms_first']} "
+              f"frag_after={frag_defrag['after_defrag']['frag_ratio']}",
+              flush=True)
+
         # pallas timings on a non-TPU platform are interpret-mode and
         # only the jnp column is a perf signal there; record which —
         # and which kernel lowering (whole|blocked) the pallas cells
@@ -134,6 +155,7 @@ def main(argv=None) -> None:
             "lowering": lowering,
             "launches_per_txn": launches,
             "shard_sweep": shard_sweep,
+            "frag_defrag": frag_defrag,
             "variants": {v: alloc_comparison_cell(v, quick=args.quick,
                                                   lowering=args.lowering)
                          for v in VARIANTS},

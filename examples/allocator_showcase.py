@@ -82,3 +82,41 @@ for walk, label in ((0, "overflow_walk=0"), (None, "full walk")):
                                      == s)).sum()) for s in range(4)]
     print(f"{label:15s} granted {int((offs >= 0).sum()):2d}/64, "
           f"per shard {per_shard}")
+
+print("\n== defragmentation: one wave un-strands a churned heap ==")
+# Churn leaves live pages scattered over many chunks; sticky bindings
+# and the stragglers lock whole chunks away from large requests.  One
+# Ouroboros.defrag wave migrates the stragglers into a dense prefix
+# and returns a forwarding table for the survivors (DESIGN.md §10).
+from repro.core import defrag
+
+dcfg = HeapConfig(total_bytes=1 << 15, chunk_bytes=1 << 11,
+                  min_page_bytes=64)
+ouro = Ouroboros(dcfg, "vl_chunk")
+st = ouro.init()
+live = []
+sizes16 = jnp.full(16, 64, jnp.int32)
+for _ in range(30):                       # drain the heap with 64 B pages
+    st, offs = ouro.alloc(st, sizes16, jnp.ones(16, bool))
+    live.extend(int(o) for o in np.asarray(offs) if o >= 0)
+keep = set(live[::6])                     # survivors, scattered
+drop = [o for o in live if o not in keep]
+for i in range(0, len(drop), 16):
+    fo = np.full(16, -1, np.int32)
+    fo[:len(drop[i:i + 16])] = drop[i:i + 16]
+    st = ouro.free(st, jnp.asarray(fo), sizes16, jnp.asarray(fo >= 0))
+fs = ouro.frag_stats(st)
+print(f"after churn : free={int(fs['free_words'])} words, largest "
+      f"extent={int(fs['largest_free_extent'])}, "
+      f"frag_ratio={float(fs['frag_ratio']):.3f}")
+st, offs = ouro.alloc(st, jnp.full(4, 2048, jnp.int32), jnp.ones(4, bool))
+print(f"2 KiB allocs on the churned heap: "
+      f"{int((np.asarray(offs) >= 0).sum())}/4 granted")
+st, fwd = ouro.defrag(st)
+fs = ouro.frag_stats(st)
+print(f"after defrag: moved {int((np.asarray(fwd.src) >= 0).sum())} "
+      f"pages, largest extent={int(fs['largest_free_extent'])}, "
+      f"frag_ratio={float(fs['frag_ratio']):.3f}")
+st, offs = ouro.alloc(st, jnp.full(4, 2048, jnp.int32), jnp.ones(4, bool))
+print(f"2 KiB allocs after the wave: "
+      f"{int((np.asarray(offs) >= 0).sum())}/4 granted")

@@ -4,9 +4,11 @@ The paper's contribution (Standish 2025 / Winter et al. ICS'20) lives
 here — see DESIGN.md §1-2 for the GPU→TPU mechanism mapping.
 """
 from repro.core.arena import Arena, ArenaLayout
+from repro.core.defrag import Forwarding
 from repro.core.heap import HeapConfig
 from repro.core.ouroboros import BACKENDS, LOWERINGS, Ouroboros, VARIANTS
 from repro.core.shards import ShardedArena, ShardLayout
 
-__all__ = ["Arena", "ArenaLayout", "BACKENDS", "HeapConfig", "LOWERINGS",
-           "Ouroboros", "ShardLayout", "ShardedArena", "VARIANTS"]
+__all__ = ["Arena", "ArenaLayout", "BACKENDS", "Forwarding", "HeapConfig",
+           "LOWERINGS", "Ouroboros", "ShardLayout", "ShardedArena",
+           "VARIANTS"]

@@ -46,7 +46,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import arena, shards, transactions
+from repro.core import arena, defrag as _defrag, shards, transactions
 from repro.core.heap import HeapConfig
 
 VARIANTS = ("page", "chunk", "va_page", "vl_page", "va_chunk", "vl_chunk")
@@ -263,6 +263,126 @@ class Ouroboros:
                                         state)
         return transactions.sharded_compact(
             self.cfg, self.num_shards, self.kind, self.family, state)
+
+    # -- defragmentation (core/defrag.py, DESIGN.md §10) --------------------
+
+    def _moves(self, max_moves) -> int:
+        if max_moves is None:
+            max_moves = min(_defrag.DEFAULT_MAX_MOVES,
+                            self.cfg.num_chunks
+                            * self.cfg.max_pages_per_chunk)
+        if not isinstance(max_moves, int) or max_moves < 1:
+            raise ValueError(
+                f"max_moves must be a positive int, got {max_moves!r}")
+        return max_moves
+
+    def defrag(self, state, max_moves=None):
+        """One defragmentation wave: plan (pure jnp — pick live extents
+        in the sparsest chunks, assign dense destinations), then execute
+        the migration as ONE fused transaction under the configured
+        backend/lowering (bit-identical across all of them).  Returns
+        ``(state', forwarding)`` where ``forwarding`` is the old→new
+        :class:`~repro.core.defrag.Forwarding` table callers use to
+        remap held offsets (``defrag.forward_offsets``, the KV cache's
+        ``apply_forwarding``).  Chunk kinds only; for page kinds the
+        wave is a no-op with an empty table.  Sharded arenas defragment
+        every shard in the same single wave; cross-shard moves are
+        :meth:`rebalance`'s job.
+
+        >>> import jax.numpy as jnp
+        >>> from repro.core import HeapConfig, Ouroboros
+        >>> cfg = HeapConfig(total_bytes=1 << 16, chunk_bytes=1 << 11,
+        ...                  min_page_bytes=16)
+        >>> ouro = Ouroboros(cfg, "vl_chunk")
+        >>> st = ouro.init()
+        >>> sizes = jnp.full(8, 16, jnp.int32)
+        >>> ones = jnp.ones(8, bool)
+        >>> st, offs = ouro.alloc(st, sizes, ones)     # one dense chunk
+        >>> st, fwd = ouro.defrag(st)
+        >>> int((fwd.src >= 0).sum())                  # nothing to move
+        0
+        >>> st, offs2 = ouro.alloc(st, sizes, ones)    # heap still serves
+        >>> bool((offs2 >= 0).all())
+        True
+        """
+        M = self._moves(max_moves)
+        if self.kind != "chunk":
+            return state, _defrag.empty_forwarding(M)
+        if self.num_shards == 1:
+            return self._defrag(state, M)
+        return self._defrag_sharded(state, M)
+
+    def rebalance(self, state, max_moves=None):
+        """One cross-shard rebalance wave (sharded arenas only): plan
+        moves from the most- to the least-loaded shard
+        (``shards.rebalance_plan_math``) and execute them through the
+        same single-kernel migration wave as :meth:`defrag`.  Returns
+        ``(state', forwarding)`` with GLOBAL offsets."""
+        if self.num_shards == 1:
+            raise ValueError("rebalance requires num_shards > 1")
+        M = self._moves(max_moves)
+        if self.kind != "chunk":
+            return state, _defrag.empty_forwarding(M)
+        return self._rebalance(state, M)
+
+    @functools.partial(jax.jit, static_argnums=(0, 2), donate_argnums=1)
+    def _defrag(self, state, max_moves):
+        src, dst, sizes = transactions.defrag_plan(
+            self.cfg, self.kind, self.family, state, max_moves)
+        st = transactions.migrate(self.cfg, self.kind, self.family,
+                                  state, src, dst, sizes, self.backend,
+                                  self.lowering)
+        return st, _defrag.Forwarding(src=src, dst=dst, sizes=sizes)
+
+    @functools.partial(jax.jit, static_argnums=(0, 2), donate_argnums=1)
+    def _defrag_sharded(self, state, max_moves):
+        src, dst, sizes = transactions.sharded_defrag_plan(
+            self.cfg, self.num_shards, self.kind, self.family, state,
+            max_moves)
+        st = transactions.sharded_migrate(
+            self.cfg, self.num_shards, self.kind, self.family, state,
+            src, dst, sizes, self.backend, self.lowering)
+        return st, _defrag.Forwarding(src=src, dst=dst, sizes=sizes)
+
+    @functools.partial(jax.jit, static_argnums=(0, 2), donate_argnums=1)
+    def _rebalance(self, state, max_moves):
+        src, dst, sizes = shards.rebalance_plan_math(
+            self.cfg, self.num_shards, self.kind, self.family,
+            state.mem, state.ctl, max_moves=max_moves)
+        st = transactions.sharded_migrate(
+            self.cfg, self.num_shards, self.kind, self.family, state,
+            src, dst, sizes, self.backend, self.lowering)
+        return st, _defrag.Forwarding(src=src, dst=dst, sizes=sizes)
+
+    # -- fragmentation observability ----------------------------------------
+
+    def frag_stats(self, state):
+        """Fragmentation counters of ``state``: a dict with
+        ``free_words``, ``largest_free_extent``, and ``frag_ratio``
+        (``1 − largest_free/total_free``; 0 = one solid free block).
+        Scalars for a single arena, per-shard ``(S,)`` arrays when
+        ``num_shards > 1`` — the signal the serving engine surfaces
+        and uses to trigger waves."""
+        if self.num_shards == 1:
+            free, largest = self._frag_stats(state)
+        else:
+            free, largest = self._frag_stats_sharded(state)
+        return {"free_words": free, "largest_free_extent": largest,
+                "frag_ratio": _defrag.frag_ratio(free, largest)}
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def _frag_stats(self, state):
+        return _defrag.frag_stats_math(self.cfg, self.kind, self.family,
+                                       state.mem, state.ctl)
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def _frag_stats_sharded(self, state):
+        scfg = shards.shard_config(self.cfg, self.num_shards)
+        pairs = [_defrag.frag_stats_math(scfg, self.kind, self.family,
+                                         state.mem[s], state.ctl[s])
+                 for s in range(self.num_shards)]
+        return (jnp.stack([p[0] for p in pairs]),
+                jnp.stack([p[1] for p in pairs]))
 
     def heap(self, state):
         """The heap proper (the paper's word array): for sharded state

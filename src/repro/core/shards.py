@@ -247,6 +247,136 @@ def with_shard(state: ShardedArena, s: int,
                         ctl=state.ctl.at[s].set(sub.ctl))
 
 
+# --------------------------------------------------------------------------
+# cross-shard rebalancing: plan moves from the most- to the least-loaded
+# --------------------------------------------------------------------------
+
+def shard_live_words(cfg: HeapConfig, num_shards: int, kind: str,
+                     family: str, mem, ctl):
+    """(S,) live heap words per shard (bound chunks' occupied pages) —
+    the load metric the rebalance plan and the engine's imbalance
+    trigger share.  Zero for page kinds (no binding to rebalance)."""
+    import jax.numpy as jnp
+    scfg = shard_config(cfg, num_shards)
+    if kind != "chunk":
+        return jnp.zeros(num_shards, jnp.int32)
+    lay = arena.layout(scfg, kind, family)
+    C = scfg.num_classes
+    out = []
+    for s in range(num_shards):
+        _, _, meta = arena.unpack(lay, arena.Arena(mem[s], ctl[s]))
+        cc = jnp.clip(meta.chunk_class, 0, C - 1)
+        ppc = jnp.right_shift(scfg.max_pages_per_chunk, cc)
+        pw = jnp.left_shift(scfg.page_words(0), cc)
+        live = jnp.where(meta.chunk_class >= 0,
+                         (ppc - meta.free_count) * pw, 0)
+        out.append(jnp.sum(live))
+    return jnp.stack(out).astype(jnp.int32)
+
+
+def rebalance_plan_math(cfg: HeapConfig, num_shards: int, kind: str,
+                        family: str, mem, ctl, *, max_moves: int):
+    """Cross-shard relocation plan (DESIGN.md §10): move live extents
+    from the most-loaded shard's **sparsest** chunks into free slots of
+    the least-loaded shard's **densest** bound chunks, class by class,
+    until the load gap would close (half the difference) or the table
+    fills.  Returns ``(src, dst, sizes)`` GLOBAL word offsets, −1
+    padded — the same forwarding-table format as the in-shard plan,
+    executed by the same ``transactions.sharded_migrate`` wave (which
+    rebuilds every shard, so the donor retires its emptied chunks)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import defrag as _defrag
+
+    if kind != "chunk":
+        f = _defrag.empty_forwarding(max_moves)
+        return f.src, f.dst, f.sizes
+    scfg = shard_config(cfg, num_shards)
+    lay = arena.layout(scfg, kind, family)
+    C = scfg.num_classes
+    nc = scfg.num_chunks
+    wpc = scfg.words_per_chunk
+    Ws = scfg.total_words
+    maxbits = scfg.bitmap_words_per_chunk * 32
+    ids = jnp.arange(nc, dtype=jnp.int32)
+    bitpos = jnp.arange(maxbits, dtype=jnp.int32)
+
+    live_w = shard_live_words(cfg, num_shards, kind, family, mem, ctl)
+    donor = jnp.argmax(live_w).astype(jnp.int32)
+    recv = jnp.argmin(live_w).astype(jnp.int32)
+    budget_words = jnp.maximum(
+        (jnp.max(live_w) - jnp.min(live_w)) // 2, 0)
+
+    def views_of(s):
+        _, ctx, meta = arena.unpack(lay, arena.Arena(
+            jax.lax.dynamic_index_in_dim(mem, s, 0, keepdims=False),
+            jax.lax.dynamic_index_in_dim(ctl, s, 0, keepdims=False)))
+        return ctx, meta
+
+    (_, dm), (rctx, rm) = views_of(donor), views_of(recv)
+    d_occ = _defrag._occupancy_bits(dm.bitmap)
+    r_occ = _defrag._occupancy_bits(rm.bitmap)
+    # the receiver accepts moves into free slots of its bound chunks
+    # AND into chunks sitting in its pool (the execute step claims
+    # those on insert, exactly like alloc's from-pool path)
+    r_pool = _defrag._pool_members(scfg, rctx.pool)
+
+    src = jnp.full(max_moves, -1, jnp.int32)
+    dst = jnp.full(max_moves, -1, jnp.int32)
+    sz = jnp.zeros(max_moves, jnp.int32)
+    base = jnp.int32(0)
+    k = jnp.arange(max_moves, dtype=jnp.int32)
+    for c in range(C):
+        ppc = scfg.pages_per_chunk(c)
+        pw = scfg.page_words(c)
+        in_range = bitpos[None, :] < ppc
+        d_bound = dm.chunk_class == c
+        r_bound = rm.chunk_class == c
+        d_live = jnp.where(d_bound, ppc - dm.free_count, 0)
+        r_live = jnp.where(r_bound, ppc - rm.free_count, 0)
+        # donor pages from its sparsest chunks first (so they empty and
+        # retire in this wave); receiver slots densest-bound-first,
+        # then pool chunks (claimed at insert) in id order
+        d_key = jnp.where(d_bound, d_live * nc + ids,
+                          (ppc + 1) * nc + ids)
+        r_key = jnp.where(r_bound, (ppc - r_live) * nc + ids,
+                          jnp.where(r_pool, (ppc + 1) * nc + ids,
+                                    (ppc + 2) * nc + ids))
+        d_order = jnp.argsort(d_key)
+        r_order = jnp.argsort(r_key)
+        src_bits = d_occ & d_bound[:, None] & in_range
+        dst_bits = (((~r_occ) & r_bound[:, None])
+                    | r_pool[:, None]) & in_range
+        avail = jnp.minimum(jnp.sum(src_bits.astype(jnp.int32)),
+                            jnp.sum(dst_bits.astype(jnp.int32)))
+        budget = jnp.clip(jnp.minimum(budget_words // pw, avail),
+                          0, max_moves - base)
+        off_of = ids[:, None] * wpc + bitpos[None, :] * pw
+        s_off, cnt = _defrag._take_bits(src_bits, d_order, budget,
+                                        off_of, max_moves)
+        d_off, _ = _defrag._take_bits(dst_bits, r_order, budget,
+                                      off_of, max_moves)
+        pos = jnp.where(k < cnt, base + k, max_moves)
+        src = src.at[pos].set(s_off + donor * Ws, mode="drop")
+        dst = dst.at[pos].set(d_off + recv * Ws, mode="drop")
+        sz = sz.at[pos].set(scfg.page_bytes(c), mode="drop")
+        base = base + cnt
+        budget_words = budget_words - cnt * pw
+        # a pool chunk claimed by this class must not be offered to a
+        # later class in the same wave (one chunk, one page size)
+        used = jnp.zeros(nc + 1, bool).at[
+            jnp.where((k < cnt) & (d_off >= 0), d_off // wpc, nc)].set(
+            True, mode="drop")
+        r_pool = r_pool & ~used[:nc]
+    # a shard never rebalances onto itself (equal loads → zero budget,
+    # but pin it structurally too)
+    noop = donor == recv
+    src = jnp.where(noop, -1, src)
+    dst = jnp.where(noop, -1, dst)
+    sz = jnp.where(noop, 0, sz)
+    return src, dst, sz
+
+
 def split_regions(slay: ShardLayout, mem):
     """``mem`` (S, mem_words) as {region: (S, region words)} stacked
     per-shard views (zero-cost static slices — the sharded blocked

@@ -50,7 +50,7 @@ from typing import Tuple
 
 import jax.numpy as jnp
 
-from repro.core import arena, chunk_alloc, page_alloc, shards
+from repro.core import arena, chunk_alloc, defrag, page_alloc, shards
 from repro.core.heap import HeapConfig
 from repro.core.page_alloc import AllocState
 
@@ -184,13 +184,48 @@ def free(cfg: HeapConfig, kind: str, family: str, state: arena.Arena,
 
 def compact(cfg: HeapConfig, kind: str, family: str,
             state: arena.Arena) -> arena.Arena:
-    """Host-triggered defragmentation pass (chunk kinds only; DESIGN.md
-    §5b).  Rebuilt queues repack into the identical layout."""
+    """Host-triggered chunk-rebind pass (chunk kinds only; DESIGN.md
+    §5b).  Rebuilt queues repack into the identical layout.  Releases
+    sticky bindings but never moves a live word — :func:`migrate` is
+    the true defragmentation pass."""
     if kind != "chunk":
         return state
     lay, st = _views(cfg, kind, family, state.mem, state.ctl)
     st = chunk_alloc.compact(cfg, family, st)
     return arena.pack(lay, st.q, st.ctx, st.meta)
+
+
+# ---- defragmentation: plan (shared jnp oracle) + migrate (execute) --------
+
+def defrag_plan(cfg: HeapConfig, kind: str, family: str,
+                state: arena.Arena, max_moves: int):
+    """Relocation plan for one wave (core/defrag.py, DESIGN.md §10).
+    Pure jnp, computed ONCE and shared verbatim by every backend —
+    the forwarding-table analogue of ``shards.home_shards``."""
+    return defrag.plan_math(cfg, kind, family, state.mem, state.ctl,
+                            max_moves=max_moves)
+
+
+def migrate(cfg: HeapConfig, kind: str, family: str, state: arena.Arena,
+            src, dst, sizes, backend: str = "jnp",
+            lowering: str = "auto") -> arena.Arena:
+    """Execute one migration wave (copy extents, flip bitmap bits,
+    retire emptied chunks, rebuild queues).  ``backend="pallas"`` runs
+    the whole wave as ONE pallas_call (kernels/defrag_txn.py) under
+    either lowering; ``"jnp"`` is the replay oracle — bit-identical,
+    word for word (tests/test_defrag.py)."""
+    _check_backend(backend)
+    if kind != "chunk":
+        return state
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        mem, ctl = kops.arena_defrag_txn(cfg, kind, family, state.mem,
+                                         state.ctl, src, dst, sizes,
+                                         lowering=lowering)
+    else:
+        mem, ctl = defrag.migrate_math(cfg, kind, family, state.mem,
+                                       state.ctl, src, dst, sizes)
+    return arena.Arena(mem=mem, ctl=ctl)
 
 
 # ---------------------------------------------------------------------------
@@ -335,7 +370,7 @@ def sharded_free(cfg: HeapConfig, num_shards: int, kind: str,
 def sharded_compact(cfg: HeapConfig, num_shards: int, kind: str,
                     family: str,
                     state: shards.ShardedArena) -> shards.ShardedArena:
-    """Per-shard defragmentation (shards are independent heaps)."""
+    """Per-shard chunk rebind (shards are independent heaps)."""
     if kind != "chunk":
         return state
     scfg = shards.shard_config(cfg, num_shards)
@@ -343,3 +378,38 @@ def sharded_compact(cfg: HeapConfig, num_shards: int, kind: str,
             for s in range(num_shards)]
     return shards.ShardedArena(mem=jnp.stack([a.mem for a in subs]),
                                ctl=jnp.stack([a.ctl for a in subs]))
+
+
+def sharded_defrag_plan(cfg: HeapConfig, num_shards: int, kind: str,
+                        family: str, state: shards.ShardedArena,
+                        max_moves: int):
+    """Per-shard compaction plans merged to GLOBAL offsets (cross-shard
+    rebalance plans come from ``shards.rebalance_plan_math``; both
+    execute through :func:`sharded_migrate`)."""
+    return defrag.sharded_plan_math(cfg, num_shards, kind, family,
+                                    state.mem, state.ctl,
+                                    max_moves=max_moves)
+
+
+def sharded_migrate(cfg: HeapConfig, num_shards: int, kind: str,
+                    family: str, state: shards.ShardedArena, src, dst,
+                    sizes, backend: str = "jnp",
+                    lowering: str = "auto") -> shards.ShardedArena:
+    """Execute one sharded migration wave: extract every source shard's
+    extents into a carry buffer, then insert + rebuild every shard —
+    the (phase, shard) schedule ``defrag.sharded_migrate_math`` replays
+    serially and both Pallas lowerings grid into ONE pallas_call.
+    Cross-shard moves (rebalancing) ride the same wave."""
+    _check_backend(backend)
+    if kind != "chunk":
+        return state
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        mem, ctl = kops.sharded_arena_defrag_txn(
+            cfg, num_shards, kind, family, state.mem, state.ctl, src,
+            dst, sizes, lowering=lowering)
+    else:
+        mem, ctl = defrag.sharded_migrate_math(
+            cfg, num_shards, kind, family, state.mem, state.ctl, src,
+            dst, sizes)
+    return shards.ShardedArena(mem=mem, ctl=ctl)

@@ -129,6 +129,34 @@ def sharded_arena_free_txn(cfg, num_shards, kind, family, mem, ctl,
         sizes_bytes, mask, interpret=_interpret())
 
 
+# ---- fused defragmentation waves (kernels/defrag_txn.py) -------------------
+
+def arena_defrag_txn(cfg, kind, family, mem, ctl, src, dst, sizes,
+                     lowering: str = "auto"):
+    """One whole migration wave (DESIGN.md §10) in one pallas_call."""
+    from repro.kernels import defrag_txn as _dfg
+    if resolve_lowering(lowering) == "blocked":
+        return _dfg.arena_defrag_txn_blocked(cfg, kind, family, mem, ctl,
+                                             src, dst, sizes,
+                                             interpret=_interpret())
+    return _dfg.arena_defrag_txn(cfg, kind, family, mem, ctl, src, dst,
+                                 sizes, interpret=_interpret())
+
+
+def sharded_arena_defrag_txn(cfg, num_shards, kind, family, mem, ctl,
+                             src, dst, sizes, lowering: str = "auto"):
+    """One SHARDED migration wave (extract/insert phases gridded over
+    the shards) in one pallas_call."""
+    from repro.kernels import defrag_txn as _dfg
+    if resolve_lowering(lowering) == "blocked":
+        return _dfg.sharded_arena_defrag_txn_blocked(
+            cfg, num_shards, kind, family, mem, ctl, src, dst, sizes,
+            interpret=_interpret())
+    return _dfg.sharded_arena_defrag_txn(
+        cfg, num_shards, kind, family, mem, ctl, src, dst, sizes,
+        interpret=_interpret())
+
+
 def count_pallas_calls(closed_jaxpr) -> int:
     """Number of ``pallas_call`` eqns anywhere in a jaxpr (descending
     into sub-jaxprs in eqn params).  The single source of truth for the

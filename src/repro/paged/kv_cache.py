@@ -163,6 +163,77 @@ def make_kv_allocator(num_pages: int, backend: str = "jnp",
                       num_shards=num_shards), 64, physical_pages)
 
 
+def forwarding_page_map(fwd, wpp: int, max_span: int):
+    """Expand a defrag :class:`~repro.core.defrag.Forwarding` table to
+    page granularity: ``(src_pids, dst_pids)`` int32 arrays (−1 padded),
+    one entry per migrated page (a multi-page extent contributes one
+    entry per page).  ``max_span`` bounds pages per extent — the
+    allocator's ``words_per_chunk // wpp``."""
+    k = fwd.sizes // (wpp * 4)
+    j = jnp.arange(max_span, dtype=jnp.int32)[None, :]
+    ok = (fwd.src >= 0)[:, None] & (j < k[:, None])
+    sp = jnp.where(ok, fwd.src[:, None] // wpp + j, -1)
+    dp = jnp.where(ok, fwd.dst[:, None] // wpp + j, -1)
+    return sp.reshape(-1), dp.reshape(-1)
+
+
+def apply_forwarding(kv: PagedKV, fwd, wpp: int,
+                     max_span: Optional[int] = None) -> PagedKV:
+    """Apply a defrag forwarding table to the paged cache: move the
+    migrated pages' K/V rows (and scales) to their new physical page
+    ids and rewrite every matching page-table entry — after which
+    reads through the table are word-identical to pre-defrag reads
+    (tests/test_defrag.py pins this).
+
+    ``max_span`` bounds pages per forwarded extent; by default it is
+    derived from the concrete table (``None`` under tracing raises —
+    pass the allocator's ``words_per_chunk // wpp`` there, as the
+    engine does).
+
+    >>> import jax.numpy as jnp
+    >>> from repro.core.defrag import Forwarding
+    >>> from repro.paged.kv_cache import apply_forwarding, init_paged_kv
+    >>> kv = init_paged_kv(1, num_pages=4, batch=1, max_pages_per_seq=2,
+    ...                    num_kv_heads=1, head_dim=2,
+    ...                    kv_dtype=jnp.float32)
+    >>> kv = kv._replace(
+    ...     layers=kv.layers._replace(k=kv.layers.k.at[:, 3].set(7.0)),
+    ...     page_table=kv.page_table.at[0, 0].set(3))
+    >>> fwd = Forwarding(src=jnp.array([3 * 64], jnp.int32),
+    ...                  dst=jnp.array([0], jnp.int32),
+    ...                  sizes=jnp.array([256], jnp.int32))
+    >>> kv2 = apply_forwarding(kv, fwd, wpp=64)
+    >>> int(kv2.page_table[0, 0]), float(kv2.layers.k[0, 0, 0, 0, 0])
+    (0, 7.0)
+    """
+    if max_span is None:
+        try:
+            max_span = max(1, int(jnp.max(fwd.sizes // (wpp * 4))))
+        except jax.errors.ConcretizationTypeError as e:
+            raise ValueError(
+                "apply_forwarding needs an explicit max_span under jit "
+                "tracing (the allocator's words_per_chunk // wpp)"
+            ) from e
+    sp, dp = forwarding_page_map(fwd, wpp, max_span)
+    np_ = kv.layers.k.shape[1]
+    moved = sp >= 0
+    safe_sp = jnp.where(moved, sp, 0)
+    safe_dp = jnp.where(moved, dp, np_)
+
+    def relocate(heap):
+        if heap is None:
+            return None
+        # unmoved lanes target row np_ (one past the end) and drop
+        return heap.at[:, safe_dp].set(heap[:, safe_sp], mode="drop")
+
+    layers = KVLayer(*(relocate(x) for x in kv.layers))
+    key = jnp.where(moved, sp, jnp.int32(-2))
+    hit = kv.page_table[:, :, None] == key[None, None, :]
+    new = jnp.sum(jnp.where(hit, dp[None, None, :], 0), axis=-1)
+    table = jnp.where(hit.any(-1), new, kv.page_table)
+    return kv._replace(layers=layers, page_table=table)
+
+
 def _quant(x):
     scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0 + 1e-8
     return jnp.round(x / scale).astype(jnp.int8), scale[..., 0]

@@ -40,7 +40,8 @@ class ServingEngine:
                  max_seq: int = 512, num_pages: Optional[int] = None,
                  kv_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
                  sample: str = "greedy", alloc_backend: str = "jnp",
-                 alloc_lowering: str = "auto", num_shards: int = 1):
+                 alloc_lowering: str = "auto", num_shards: int = 1,
+                 rebalance_threshold: Optional[int] = None):
         # Validate the allocator knobs before any expensive setup: a
         # typo like alloc_backend="palas" must fail here with the menu
         # of choices, not surface later (or worse, quietly behave like
@@ -57,6 +58,16 @@ class ServingEngine:
         if not isinstance(num_shards, int) or num_shards < 1:
             raise ValueError(
                 f"num_shards must be a positive int, got {num_shards!r}")
+        if rebalance_threshold is not None:
+            if num_shards == 1:
+                raise ValueError(
+                    "rebalance_threshold requires num_shards > 1")
+            if (not isinstance(rebalance_threshold, int)
+                    or rebalance_threshold < 1):
+                raise ValueError(
+                    f"rebalance_threshold must be None or a positive "
+                    f"int (pages of max-min shard imbalance), got "
+                    f"{rebalance_threshold!r}")
         cfg = model.cfg
         self.model, self.params, self.cfg = model, params, cfg
         self.max_batch, self.max_seq = max_batch, max_seq
@@ -75,6 +86,7 @@ class ServingEngine:
         # exhausted shards overflow to neighbors inside the same single
         # kernel launch.
         self.num_shards = num_shards
+        self.rebalance_threshold = rebalance_threshold
         self.ouro, self.wpp, physical_pages = KV.make_kv_allocator(
             self.num_pages, backend=alloc_backend,
             lowering=alloc_lowering, num_shards=num_shards)
@@ -119,7 +131,14 @@ class ServingEngine:
                       # (the overflow walk at work)
                       "num_shards": num_shards,
                       "shard_pages_live": [0] * num_shards,
-                      "alloc_overflows": 0}
+                      "alloc_overflows": 0,
+                      # defragmentation observability (DESIGN.md §10):
+                      # transactions issued, waves run, pages moved
+                      "alloc_txns": 0,
+                      "defrag_waves": 0,
+                      "rebalance_waves": 0,
+                      "pages_migrated": 0}
+        self.refresh_frag_stats()
 
     # ---- request lifecycle -------------------------------------------------
     def submit(self, prompt, max_new_tokens=32, eos_id=None) -> int:
@@ -138,18 +157,24 @@ class ServingEngine:
         else:
             self.caches = self.caches._replace(kv=kv)
 
-    def _bulk_alloc(self, n_pages: int, slot: int = 0) -> List[int]:
-        """One allocator transaction for up to n_pages new pages.
-        Sharded allocators home the grants on ``slot % num_shards``
-        (overflowing to neighbor shards when that shard is full)."""
+    def _bulk_alloc(self, homes: List[int]) -> List[int]:
+        """ONE allocator transaction granting one page per entry of
+        ``homes`` (the requesting slot's home shard — grants overflow
+        to neighbor shards when that shard is full).  Lanes from
+        different slots coalesce into this single kernel launch: a
+        decode step issues at most one transaction for the whole
+        batch."""
+        n_pages = len(homes)
         lanes = max(self.max_batch * 2, n_pages)
         sizes = jnp.full(lanes, self.page_bytes, jnp.int32)
         mask = jnp.arange(lanes) < n_pages
-        home = slot % self.num_shards
+        home = np.zeros(lanes, np.int32)
+        home[:n_pages] = homes
+        self.stats["alloc_txns"] += 1
         if self.num_shards > 1:
-            hint = jnp.full(lanes, home, jnp.int32)
             self.alloc_state, offs = self.ouro.alloc(
-                self.alloc_state, sizes, mask, shard_hint=hint)
+                self.alloc_state, sizes, mask,
+                shard_hint=jnp.asarray(home))
         else:
             self.alloc_state, offs = self.ouro.alloc(self.alloc_state,
                                                      sizes, mask)
@@ -158,8 +183,22 @@ class ServingEngine:
         self.stats["allocs"] += int(ok.sum())
         self.stats["alloc_failures"] += int((~ok).sum())
         shard = self._note_shard_pages(offs[ok], +1)
-        self.stats["alloc_overflows"] += int((shard != home).sum())
+        self.stats["alloc_overflows"] += int((shard != home[:n_pages][ok])
+                                             .sum())
         return [int(o) // self.wpp if o >= 0 else -1 for o in offs]
+
+    def _alloc_pages(self, homes: List[int]) -> List[int]:
+        """Bulk page grant with defragmentation recovery: if any lane
+        fails, return this transaction's partial grants, run ONE
+        defrag wave (migrating stragglers together and retiring the
+        emptied chunks to the pool), and retry once — the paper-regime
+        alternative to dying on a fragmented heap."""
+        got = self._bulk_alloc(homes)
+        if all(g >= 0 for g in got):
+            return got
+        self._bulk_free([g for g in got if g >= 0])
+        self.defrag()
+        return self._bulk_alloc(homes)
 
     def _note_shard_pages(self, offs, delta: int):
         """Update per-shard live-page occupancy for granted/freed word
@@ -184,25 +223,117 @@ class ServingEngine:
         self._note_shard_pages(offs[offs >= 0], -1)
 
     def _map_pages(self, slot: int, upto_tokens: int):
-        """Grow slot's page table to cover ``upto_tokens`` positions."""
+        """Grow slot's page table to cover ``upto_tokens`` positions
+        (admission path; decode growth coalesces in ``step``)."""
         if self._kv() is None:  # attention-free family: O(1) state
             return True
         need = -(-upto_tokens // self.page)
         missing = need - len(self.slot_pages[slot])
         if missing <= 0:
             return True
-        got = self._bulk_alloc(missing, slot=slot)
+        got = self._alloc_pages([slot % self.num_shards] * missing)
         if any(g < 0 for g in got):
             self._bulk_free([g for g in got if g >= 0])
             return False
-        kv = self._kv()
-        pt = kv.page_table
-        base = len(self.slot_pages[slot])
-        idx = jnp.arange(base, need)
-        pt = pt.at[slot, idx].set(jnp.asarray(got, jnp.int32))
-        self.slot_pages[slot].extend(got)
-        self._set_kv(kv._replace(page_table=pt))
+        self._map_granted([slot] * missing, got)
         return True
+
+    def _map_granted(self, slots: List[int], pages: List[int]):
+        """Extend the slots' page tables with freshly granted page ids
+        (one scatter covers every growing slot)."""
+        kv = self._kv()
+        cols = []
+        grown: Dict[int, int] = {}
+        for s in slots:
+            cols.append(len(self.slot_pages[s]) + grown.get(s, 0))
+            grown[s] = grown.get(s, 0) + 1
+        pt = kv.page_table.at[jnp.asarray(slots, jnp.int32),
+                              jnp.asarray(cols, jnp.int32)].set(
+            jnp.asarray(pages, jnp.int32))
+        for s, g in zip(slots, pages):
+            self.slot_pages[s].append(g)
+        self._set_kv(kv._replace(page_table=pt))
+
+    # ---- defragmentation (core/defrag.py, DESIGN.md §10) -------------------
+
+    def defrag(self) -> int:
+        """Run one defragmentation wave on the KV allocator and remap
+        every engine-side page reference through the forwarding table
+        (KV page heaps + page tables + slot page lists).  Returns the
+        number of pages migrated.  Triggered automatically on
+        allocation failure; also callable by operators between
+        batches."""
+        self.alloc_state, fwd = self.ouro.defrag(self.alloc_state)
+        moved = self._apply_forwarding(fwd)
+        self.stats["defrag_waves"] += 1
+        self.stats["pages_migrated"] += moved
+        self.refresh_frag_stats()
+        return moved
+
+    def _maybe_rebalance(self):
+        """One cross-shard rebalance wave when per-shard live pages
+        diverge beyond ``rebalance_threshold`` (pages, max − min)."""
+        if self.num_shards == 1 or self.rebalance_threshold is None:
+            return
+        live = self._shard_pages
+        if int(live.max() - live.min()) <= self.rebalance_threshold:
+            return
+        self.alloc_state, fwd = self.ouro.rebalance(self.alloc_state)
+        moved = self._apply_forwarding(fwd)
+        self.stats["rebalance_waves"] += 1
+        self.stats["pages_migrated"] += moved
+        self.refresh_frag_stats()
+
+    def _apply_forwarding(self, fwd) -> int:
+        """Remap every page reference the engine holds through a defrag
+        forwarding table: KV page heaps move rows old→new, page tables
+        and ``slot_pages`` rewrite ids, per-shard occupancy follows
+        pages that changed shards.  Returns pages migrated."""
+        if not (np.asarray(fwd.src) >= 0).any():
+            return 0
+        max_span = self.ouro.cfg.words_per_chunk // self.wpp
+        kv = self._kv()
+        if kv is not None:
+            self._set_kv(KV.apply_forwarding(kv, fwd, self.wpp,
+                                             max_span=max_span))
+        # host-side tables remap through the SAME page expansion the
+        # KV cache used (one source of truth for extent → page math)
+        sp, dp = (np.asarray(x) for x in
+                  KV.forwarding_page_map(fwd, self.wpp, max_span))
+        mapping: Dict[int, int] = {int(s): int(d)
+                                   for s, d in zip(sp, dp) if s >= 0}
+        total = len(mapping)
+        for pages in self.slot_pages:
+            for i, p in enumerate(pages):
+                if p in mapping:
+                    old_sh = p * self.wpp // self._shard_words
+                    new_sh = mapping[p] * self.wpp // self._shard_words
+                    if old_sh != new_sh:
+                        self._shard_pages[old_sh] -= 1
+                        self._shard_pages[new_sh] += 1
+                    pages[i] = mapping[p]
+        self.stats["shard_pages_live"] = [int(x) for x in
+                                          self._shard_pages]
+        return total
+
+    def refresh_frag_stats(self):
+        """Recompute fragmentation observability into ``stats``:
+        ``free_words``, ``largest_free_extent``, and ``frag_ratio``
+        (1 − largest/total) — per shard when ``num_shards > 1``."""
+        fs = self.ouro.frag_stats(self.alloc_state)
+        if self.num_shards > 1:
+            self.stats["free_words"] = [
+                int(x) for x in np.asarray(fs["free_words"])]
+            self.stats["largest_free_extent"] = [
+                int(x) for x in np.asarray(fs["largest_free_extent"])]
+            self.stats["frag_ratio"] = [
+                float(x) for x in np.asarray(fs["frag_ratio"])]
+        else:
+            self.stats["free_words"] = int(fs["free_words"])
+            self.stats["largest_free_extent"] = int(
+                fs["largest_free_extent"])
+            self.stats["frag_ratio"] = float(fs["frag_ratio"])
+        return fs
 
     def _admit(self):
         for slot in range(self.max_batch):
@@ -288,17 +419,36 @@ class ServingEngine:
             ssm_conv=axis1(new_caches.ssm_conv, old.ssm_conv))
 
     # ---- main loop -----------------------------------------------------------
+    def _grow_active(self, active: List[int]):
+        """Decode-step page growth for ALL active slots as ONE bulk
+        alloc transaction (previously ``_map_pages`` ran per slot — up
+        to ``max_batch`` kernel launches per decode step).  Raises
+        ``MemoryError`` only after a defragmentation wave failed to
+        reclaim enough pages."""
+        if self._kv() is None:  # attention-free family: O(1) state
+            return
+        slots = []
+        for s in active:
+            need = -(-(int(self.slot_len[s]) + 1) // self.page)
+            slots.extend([s] * (need - len(self.slot_pages[s])))
+        if not slots:
+            return
+        got = self._alloc_pages([s % self.num_shards for s in slots])
+        if any(g < 0 for g in got):
+            self._bulk_free([g for g in got if g >= 0])
+            raise MemoryError("KV heap exhausted mid-flight")
+        self._map_granted(slots, got)
+
     def step(self) -> List[Request]:
         """Admit, grow pages, decode one token for all active slots,
         retire finished requests.  Returns requests finished this step."""
         self._admit()
+        self._maybe_rebalance()
         active = [s for s in range(self.max_batch)
                   if self.slot_req[s] is not None]
         finished = []
         if active:
-            for s in active:
-                if not self._map_pages(s, int(self.slot_len[s]) + 1):
-                    raise MemoryError("KV heap exhausted mid-flight")
+            self._grow_active(active)
             toks = np.zeros((self.max_batch, 1), np.int32)
             for s in active:
                 toks[s, 0] = self.slot_req[s].out_tokens[-1]

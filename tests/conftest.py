@@ -27,6 +27,11 @@ def pytest_configure(config):
         "compiled_lowering: exercises the region-blocked compiled "
         "lowering of the fused arena kernels (CI runs these under "
         "REPRO_ALLOC_LOWERING=blocked as a dedicated job)")
+    config.addinivalue_line(
+        "markers",
+        "defrag: exercises the live defragmentation subsystem "
+        "(core/defrag.py, kernels/defrag_txn.py, DESIGN.md §10; wired "
+        "into the forced-blocked and nightly CI jobs)")
 
 
 def pytest_collection_modifyitems(config, items):

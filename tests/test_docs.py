@@ -36,6 +36,7 @@ CFG = HeapConfig(total_bytes=1 << 16, chunk_bytes=1 << 11,
 DOCTEST_MODULES = (
     "repro.core.ouroboros",
     "repro.core.arena",
+    "repro.core.defrag",
     "repro.core.shards",
     "repro.core.transactions",
     "repro.paged.kv_cache",
@@ -106,3 +107,17 @@ def test_design_s9_walk_schedule_documented():
     for needle in ("attempt-major", "overflow walk", "shard_hint",
                    "ONE pallas_call", "serial replay"):
         assert needle in sec, f"DESIGN.md §9 lost {needle!r}"
+
+
+# ---- DESIGN.md §10: the defragmentation contract --------------------------
+
+def test_design_s10_defrag_documented():
+    """The §10 contract keywords tests/test_defrag.py relies on stay
+    documented: the plan/execute split, the forwarding-table format,
+    the one-kernel waves, and the shard-rebalance policy."""
+    sec = DOC.read_text().split("## §10")[1].split("\n## §")[0]
+    for needle in ("plan/execute split", "Forwarding(src, dst, sizes)",
+                   "ONE `pallas_call` per wave", "class-major rebuild",
+                   "rebalance", "most-loaded", "least-loaded",
+                   "apply_forwarding", "frag_ratio", "max_moves"):
+        assert needle in sec, f"DESIGN.md §10 lost {needle!r}"
