@@ -155,6 +155,17 @@ def pallas_calls_per_defrag_wave(variant: str, backend: str = "pallas",
         lambda s: ouro.defrag(s, max_moves=32))(st))
 
 
+def launches_per_tick(engine) -> int:
+    """pallas_call launch count of ONE fused decode mega-step tick,
+    read off the engine's own mega jaxpr.  A thin delegate to
+    ``ServingEngine.launches_per_tick`` — the SAME counter feeds
+    ``engine.stats["launches_per_tick"]`` and the fig8 serving records,
+    so the two can never disagree.  Constant in ``max_batch`` (the tick
+    is one jitted program; the grow transaction is a single kernel):
+    1 with ``alloc_backend="pallas"``, 0 with the jnp oracle."""
+    return engine.launches_per_tick()
+
+
 def alloc_comparison_cell(variant: str, *, quick: bool = False,
                           lowering: str = "auto"):
     """One jnp-vs-pallas cell per variant for BENCH_alloc.json — the

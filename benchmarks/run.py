@@ -25,9 +25,17 @@ record now also appends a ``shard_sweep`` — throughput vs num_shards
 (1, 2, 4) per swept variant — so BENCH_alloc.json tracks horizontal
 scaling alongside the jnp-vs-pallas trajectory.
 
+``--serve-json PATH`` appends a serving-throughput record (benchmarks/
+fig8_serve.py): tokens/sec for the host-loop and fused mega-step decode
+paths plus the launches-per-tick proof, accumulating in
+``BENCH_serve.json`` with the same append-only trajectory format.
+``fig8_serve`` is not in the default figure list (it builds a model);
+run it with ``--fig fig8_serve`` or via ``--serve-json``.
+
     PYTHONPATH=src python -m benchmarks.run [--quick] [--fig fig1_page]
         [--backend jnp|pallas|both] [--lowering auto|whole|blocked]
         [--num-shards N] [--alloc-json BENCH_alloc.json]
+        [--serve-json BENCH_serve.json]
 """
 from __future__ import annotations
 
@@ -62,6 +70,10 @@ def main(argv=None) -> None:
     ap.add_argument("--alloc-json", default=None, metavar="PATH",
                     help="also write per-variant jnp-vs-pallas "
                          "avg_all/avg_subsequent to PATH")
+    ap.add_argument("--serve-json", default=None, metavar="PATH",
+                    help="append a serving-throughput record "
+                         "(fig8_serve: host vs mega tokens/sec + "
+                         "launches-per-tick) to PATH")
     args = ap.parse_args(argv)
     figs = args.fig or FIGS
     backends = (("jnp", "pallas") if args.backend == "both"
@@ -77,6 +89,15 @@ def main(argv=None) -> None:
                 name = (f"{fig}/{row['variant']}/{row['backend']}"
                         f"/{row['lowering']}/sh{row['num_shards']}"
                         f"/n{row['n']}/s{row['size']}")
+                if "tokens_per_s" in row:  # serving rows (fig8_serve)
+                    derived = (
+                        f"tok_per_s_all={row['tokens_per_s_all']:.1f} "
+                        f"tok_per_s_sub={row['tokens_per_s']:.1f} "
+                        f"alloc_txns={row['alloc_txns']} "
+                        f"launches_per_tick={row['launches_per_tick']}")
+                    print(f"{name},{row['tokens_per_s']:.1f},{derived}",
+                          flush=True)
+                    continue
                 derived = (f"alloc_all={row['alloc_us_all']:.0f}us "
                            f"alloc_sub={row['alloc_us_subsequent']:.0f}us "
                            f"free_sub={row['free_us_subsequent']:.0f}us "
@@ -169,6 +190,29 @@ def main(argv=None) -> None:
             json.dump({"runs": runs}, f, indent=2, sort_keys=True)
         os.replace(tmp, args.alloc_json)
         print(f"appended run {len(runs)} to {args.alloc_json}", flush=True)
+
+    if args.serve_json:
+        import jax
+        from benchmarks import fig8_serve
+
+        cells = fig8_serve.serve_record(quick=args.quick)
+        for name, c in cells.items():
+            print(f"serve,{name},tok_per_s_sub={c['tokens_per_s']:.1f} "
+                  f"launches_per_tick={c['launches_per_tick']}",
+                  flush=True)
+        record = {
+            "platform": jax.default_backend(),
+            "git_sha": _git_sha(),
+            "quick": bool(args.quick),
+            "cells": cells,
+        }
+        runs = _load_runs(args.serve_json)
+        runs.append(record)
+        tmp = args.serve_json + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"runs": runs}, f, indent=2, sort_keys=True)
+        os.replace(tmp, args.serve_json)
+        print(f"appended run {len(runs)} to {args.serve_json}", flush=True)
 
 
 def _git_sha() -> str:

@@ -207,6 +207,59 @@ class Ouroboros:
         return self._free_sharded(state, offsets_words, sizes_bytes,
                                   mask)
 
+    def grow(self, state, need, size_bytes: int, lanes: int, home=None):
+        """Grow-to-target-lens transaction: the decode mega-step entry.
+
+        ``need`` is a DEVICE per-slot page-need vector ``(B,)`` (how
+        many new ``size_bytes`` regions each slot must be granted) —
+        no host slot list, so the whole call is jit-traceable inside a
+        fused decode tick.  Lane routing is
+        :func:`transactions.grow_lanes` (slot-major, the same order
+        the host loop issued); the bulk grant itself is the ordinary
+        single transaction — still ONE ``pallas_call`` under
+        ``backend="pallas"`` with either lowering, sharded or not.
+        ``home`` (sharded only) gives per-SLOT home shards ``(B,)``;
+        ``None`` homes slot ``b`` on ``b % num_shards``, the KV
+        cache's routing.
+
+        Returns ``(state', lane_offsets, lane_slot, lane_rank,
+        lane_mask)`` — offset −1 marks a failed or masked lane.
+        Deliberately NOT jitted here: callers embed it in their own
+        jitted step (the engine donates the whole carry).
+
+        >>> import jax.numpy as jnp
+        >>> from repro.core import HeapConfig, Ouroboros
+        >>> cfg = HeapConfig(total_bytes=1 << 16, chunk_bytes=1 << 11,
+        ...                  min_page_bytes=16)
+        >>> ouro = Ouroboros(cfg, "page")
+        >>> st = ouro.init()
+        >>> need = jnp.array([2, 0, 1], jnp.int32)
+        >>> st, offs, slot, rank, mask = ouro.grow(st, need, 64, lanes=4)
+        >>> slot.tolist(), mask.tolist()
+        ([0, 0, 2, 2], [True, True, True, False])
+        >>> bool((offs[:3] >= 0).all()), int(offs[3])
+        (True, -1)
+        """
+        lane_slot, lane_rank, lane_mask = transactions.grow_lanes(
+            need, lanes)
+        sizes = jnp.full(lanes, size_bytes, jnp.int32)
+        if self.num_shards == 1:
+            if home is not None:
+                raise ValueError("home requires num_shards > 1")
+            state, offs = transactions.alloc(
+                self.cfg, self.kind, self.family, state, sizes,
+                lane_mask, self.backend, self.lowering)
+        else:
+            if home is None:
+                home = jnp.arange(need.shape[0], dtype=jnp.int32)
+            lane_home = (jnp.asarray(home, jnp.int32)
+                         % self.num_shards)[lane_slot]
+            state, offs = transactions.sharded_alloc(
+                self.cfg, self.num_shards, self.kind, self.family,
+                state, sizes, lane_mask, lane_home, self.walk,
+                self.backend, self.lowering)
+        return state, offs, lane_slot, lane_rank, lane_mask
+
     @functools.partial(jax.jit, static_argnums=0, donate_argnums=1)
     def _alloc(self, state, sizes_bytes, mask):
         return transactions.alloc(self.cfg, self.kind, self.family,

@@ -96,6 +96,40 @@ def free_math(cfg: HeapConfig, kind: str, family: str, mem, ctl,
     return new.mem, new.ctl
 
 
+# ---- grow-to-target-lens lane routing (decode mega-step entry) ------------
+
+def grow_lanes(need, lanes: int):
+    """Expand a DEVICE per-slot page-need vector into allocation lanes.
+
+    The decode mega-step computes ``need[b]`` (how many new pages slot
+    ``b`` must be granted this tick) from device-resident sequence
+    lengths — no host slot list exists.  This routine turns that vector
+    into the lane layout every alloc transaction consumes: lane ``j``
+    carries slot ``slot[j]``'s ``rank[j]``-th new page, slots packed in
+    slot order (the same order the engine's host loop used), and
+    ``mask[j]`` marks live lanes.  Pure jnp, shared verbatim by both
+    backends and both Pallas lowerings, so lane routing can never
+    diverge between them.  Lanes beyond ``sum(need)`` are masked;
+    demand beyond ``lanes`` is silently truncated — callers detect the
+    shortfall by comparing granted counts against ``need``.
+
+    >>> import jax.numpy as jnp
+    >>> from repro.core.transactions import grow_lanes
+    >>> slot, rank, mask = grow_lanes(jnp.array([2, 0, 1]), lanes=4)
+    >>> slot.tolist(), rank.tolist(), mask.tolist()
+    ([0, 0, 2, 2], [0, 1, 0, 0], [True, True, True, False])
+    """
+    need = need.astype(jnp.int32)
+    B = need.shape[0]
+    cum = jnp.cumsum(need)
+    j = jnp.arange(lanes, dtype=jnp.int32)
+    mask = j < cum[-1]
+    slot = jnp.minimum(
+        jnp.searchsorted(cum, j, side="right").astype(jnp.int32), B - 1)
+    rank = jnp.where(mask, j - (cum[slot] - need[slot]), 0)
+    return slot, rank, mask
+
+
 # ---- public dispatcher ----------------------------------------------------
 
 BACKENDS = ("jnp", "pallas")

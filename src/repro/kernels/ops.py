@@ -202,8 +202,13 @@ def bitmap_select_indices(words, k, *, max_k: int):
     return jnp.where(valid, idx, -1).astype(jnp.int32), valid
 
 
-def paged_attention(q, k_pages, v_pages, page_table, seq_lens):
+def paged_attention(q, k_pages, v_pages, page_table, seq_lens,
+                    wpp=None):
+    """Paged decode attention; ``wpp`` set means ``page_table`` holds
+    raw arena word offsets (page id derived at DMA-issue time — see
+    kernels/paged_attention.py)."""
     return _paged_attention(q, k_pages, v_pages, page_table, seq_lens,
+                            wpp=wpp,
                             interpret=_interpret())
 
 

@@ -62,12 +62,20 @@ def _kernel(pt_ref, sl_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[...] = (acc_ref[...] / (l_ref[...] + 1e-30))[None, None]
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "wpp"))
 def paged_attention(q, k_pages, v_pages, page_table, seq_lens, *,
-                    interpret: bool = False):
+                    interpret: bool = False, wpp: int | None = None):
     """q: (B, Hq, D); {k,v}_pages: (NP, page, Hkv, D);
     page_table: (B, P) int32 (−1 = hole); seq_lens: (B,) int32.
-    Returns (B, Hq, D) float32."""
+    Returns (B, Hq, D) float32.
+
+    ``wpp`` (words per page): when set, ``page_table`` holds raw arena
+    WORD offsets exactly as the allocator granted them — the decode
+    mega-step path where grants scatter into the device table with no
+    host round-trip.  The page id is derived (``offset // wpp``) inside
+    the scalar-prefetch index map, i.e. at DMA-issue time, so the
+    kernel reads the allocator's own words directly (holes stay −1
+    under floor division)."""
     B, Hq, D = q.shape
     NP, page, Hkv, _ = k_pages.shape
     P = page_table.shape[1]
@@ -75,7 +83,8 @@ def paged_attention(q, k_pages, v_pages, page_table, seq_lens, *,
     qg = q.reshape(B, Hkv, G, D)
 
     def kv_map(b, h, i, pt, sl):
-        return (jnp.maximum(pt[b, i], 0), 0, h, 0)
+        pid = pt[b, i] if wpp is None else pt[b, i] // wpp
+        return (jnp.maximum(pid, 0), 0, h, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,

@@ -163,6 +163,34 @@ def make_kv_allocator(num_pages: int, backend: str = "jnp",
                       num_shards=num_shards), 64, physical_pages)
 
 
+def scatter_grant_words(page_table, page_counts, lane_slot, lane_rank,
+                        lane_offs, grant_ok, wpp: int):
+    """Scatter freshly granted arena WORD offsets into the device page
+    table — the mega-step path where the table is never materialized on
+    the host: grants flow kernel → page id (``offset // wpp``) → table
+    entirely on device.  Lane ``j`` lands at row ``lane_slot[j]``,
+    column ``page_counts[slot] + lane_rank[j]`` (the slot's next free
+    table slots, in grant order); lanes with ``grant_ok[j]`` False are
+    dropped.
+
+    >>> import jax.numpy as jnp
+    >>> from repro.paged.kv_cache import scatter_grant_words
+    >>> pt = jnp.full((2, 3), -1, jnp.int32)
+    >>> pt = scatter_grant_words(
+    ...     pt, jnp.array([1, 0]),                  # pages already mapped
+    ...     jnp.array([0, 1]), jnp.array([0, 0]),   # lane slot / rank
+    ...     jnp.array([128, 0]),                    # granted word offsets
+    ...     jnp.array([True, True]), wpp=64)
+    >>> pt.tolist()
+    [[-1, 2, -1], [0, -1, -1]]
+    """
+    B, P = page_table.shape
+    pages = (lane_offs // wpp).astype(jnp.int32)
+    row = jnp.where(grant_ok, lane_slot, B)
+    col = jnp.where(grant_ok, page_counts[lane_slot] + lane_rank, P)
+    return page_table.at[row, col].set(pages, mode="drop")
+
+
 def forwarding_page_map(fwd, wpp: int, max_span: int):
     """Expand a defrag :class:`~repro.core.defrag.Forwarding` table to
     page granularity: ``(src_pids, dst_pids)`` int32 arrays (−1 padded),

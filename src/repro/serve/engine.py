@@ -9,13 +9,36 @@ completion.  Page churn across requests of different lengths is exactly
 the fragmentation workload Ouroboros was built for; the default
 ``vl_chunk`` variant claims heap chunks lazily and reuses freed pages.
 
+Two decode loops share the admission/retirement machinery:
+
+``mega_step=False`` (host loop)  one jitted decode per tick with host
+    glue around it: the host computes page need per slot, issues the
+    bulk grow, scatters the grants, and reads back this tick's token
+    ids (the decode jit argmaxes on device, so only ``(B,)`` int32 —
+    never ``(B, vocab)`` logits — crosses the boundary).
+
+``mega_step=True`` (fused decode mega-step, DESIGN.md §11)  ONE jitted
+    function per tick that (a) computes per-slot page need from
+    device-resident ``lens``/``active`` state, (b) runs the bulk grow
+    as the existing single-``pallas_call`` arena transaction
+    (``Ouroboros.grow``), (c) scatters granted pages into the device
+    page table straight from the grant words
+    (``kv_cache.scatter_grant_words`` — no host-materialized table),
+    (d) runs the model forward with paged attention, and (e) greedily
+    samples + advances ``seq_lens``/last-token on device.  A decode
+    tick is a fixed small number of launches regardless of
+    ``max_batch``; the host syncs one tiny ``(B,)`` finished/failed
+    flag vector per tick and touches only control-plane decisions
+    (admission, retirement, and the defrag-retry on allocation
+    failure, which stays host-side).
+
 Single-host reference implementation (the dry-run serve_step covers the
 multi-pod path); everything device-side is jitted.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -35,13 +58,79 @@ class Request:
     done: bool = False
 
 
+class MegaState(NamedTuple):
+    """Device-resident per-slot decode state — the mega-step carry.
+
+    The host keeps cheap integer mirrors (advanced from the per-tick
+    flag vector) for stats and retirement, but the device arrays are
+    the truth the fused tick computes from."""
+    last_tok: jnp.ndarray     # (B,) int32 — token to decode this tick
+    lens: jnp.ndarray         # (B,) int32 — tokens logically generated
+    page_counts: jnp.ndarray  # (B,) int32 — KV pages mapped per slot
+    active: jnp.ndarray       # (B,) bool
+    budget: jnp.ndarray       # (B,) int32 — new tokens still allowed
+    eos: jnp.ndarray          # (B,) int32 — eos id, −1 = none
+    out_buf: jnp.ndarray      # (B, cap) int32 — generated tokens
+    n_out: jnp.ndarray        # (B,) int32 — tokens in out_buf
+
+
+def merge_rows(cfg, new_caches, old_caches, row_mask):
+    """Keep only ``row_mask`` rows from a cache update.
+
+    Structure-aware (never shape-guessing — num_layers can equal
+    max_batch): page heaps are taken wholesale (rows outside the mask
+    either had their page tables hidden or their writes dropped on a
+    table hole — heap rows stay disjoint); batch-first leaves merge on
+    axis 0; layer-stacked state leaves (Lr, B, ...) merge on axis 1.
+    Shared by the admission prefill (mask = the admitted row) and the
+    mega-step (mask = slots that advanced this tick)."""
+    mask = jnp.asarray(row_mask)
+
+    def axis0(new, old):
+        if new is None or old is None:
+            return new
+        sel = mask.reshape((-1,) + (1,) * (new.ndim - 1))
+        return jnp.where(sel, new, old)
+
+    def axis1(new, old):
+        if new is None or old is None:
+            return new
+        sel = mask.reshape((1, -1) + (1,) * (new.ndim - 2))
+        return jnp.where(sel, new, old)
+
+    def merge_kv(new_kv, old_kv):
+        if new_kv is None:
+            return None
+        return new_kv._replace(
+            layers=new_kv.layers,  # wholesale: disjoint heap rows
+            page_table=axis0(new_kv.page_table, old_kv.page_table),
+            seq_lens=axis0(new_kv.seq_lens, old_kv.seq_lens))
+
+    old = old_caches
+    if cfg.is_encdec:
+        return new_caches._replace(
+            self_kv=merge_kv(new_caches.self_kv, old.self_kv),
+            cross_k=axis1(new_caches.cross_k, old.cross_k),
+            cross_v=axis1(new_caches.cross_v, old.cross_v),
+            enc_valid=(axis0(new_caches.enc_valid, old.enc_valid)
+                       if new_caches.enc_valid is not None
+                       else old.enc_valid))
+    return new_caches._replace(
+        kv=merge_kv(new_caches.kv, old.kv),
+        ssm_h=axis1(new_caches.ssm_h, old.ssm_h),
+        ssm_conv=axis1(new_caches.ssm_conv, old.ssm_conv))
+
+
 class ServingEngine:
     def __init__(self, model: Model, params, *, max_batch: int = 8,
                  max_seq: int = 512, num_pages: Optional[int] = None,
                  kv_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
                  sample: str = "greedy", alloc_backend: str = "jnp",
                  alloc_lowering: str = "auto", num_shards: int = 1,
-                 rebalance_threshold: Optional[int] = None):
+                 rebalance_threshold: Optional[int] = None,
+                 mega_step: bool = False, max_new_cap: int = 256,
+                 defrag_threshold: Optional[float] = None,
+                 defrag_check_interval: int = 1):
         # Validate the allocator knobs before any expensive setup: a
         # typo like alloc_backend="palas" must fail here with the menu
         # of choices, not surface later (or worse, quietly behave like
@@ -68,6 +157,21 @@ class ServingEngine:
                     f"rebalance_threshold must be None or a positive "
                     f"int (pages of max-min shard imbalance), got "
                     f"{rebalance_threshold!r}")
+        if defrag_threshold is not None and not (
+                0.0 < float(defrag_threshold) < 1.0):
+            raise ValueError(
+                f"defrag_threshold must be None or a frag_ratio in "
+                f"(0, 1), got {defrag_threshold!r}")
+        if not isinstance(defrag_check_interval, int) \
+                or defrag_check_interval < 1:
+            raise ValueError(
+                f"defrag_check_interval must be a positive int (steps "
+                f"between frag_ratio checks), got "
+                f"{defrag_check_interval!r}")
+        if not isinstance(max_new_cap, int) or max_new_cap < 1:
+            raise ValueError(
+                f"max_new_cap must be a positive int, got "
+                f"{max_new_cap!r}")
         cfg = model.cfg
         self.model, self.params, self.cfg = model, params, cfg
         self.max_batch, self.max_seq = max_batch, max_seq
@@ -75,6 +179,12 @@ class ServingEngine:
         self.pps = -(-max_seq // self.page)
         self.num_pages = num_pages or max_batch * self.pps
         assert sample == "greedy"
+        self.compute_dtype = compute_dtype
+        self.mega_step = bool(mega_step)
+        self.max_new_cap = max_new_cap
+        self.defrag_threshold = (None if defrag_threshold is None
+                                 else float(defrag_threshold))
+        self.defrag_check_interval = defrag_check_interval
 
         # --- the paper's allocator manages the page-id space -------------
         # alloc_state is the flat device-resident arena (core/arena.py:
@@ -107,12 +217,35 @@ class ServingEngine:
         self.slot_len = np.zeros(max_batch, np.int64)  # host truth
         self.waiting: List[Request] = []
         self._uid = 0
+        # both entry points argmax ON DEVICE: only (B,) int32 token ids
+        # ever cross the host boundary, never (B, vocab) logits.
         self._prefill = jax.jit(
-            lambda p, b, c: model.prefill(p, b, c, remat_policy="none",
-                                          dtype=compute_dtype))
+            lambda p, b, c: _tokens_of(model.prefill(
+                p, b, c, remat_policy="none", dtype=compute_dtype)))
         self._decode = jax.jit(
-            lambda p, t, c: model.decode_step(p, t, c,
-                                              dtype=compute_dtype))
+            lambda p, t, c: _tokens_of(model.decode_step(
+                p, t, c, dtype=compute_dtype)))
+
+        # --- device-resident slot state (mega-step mode) -----------------
+        if self.mega_step:
+            B = max_batch
+            self.mega_state = MegaState(
+                last_tok=jnp.zeros(B, jnp.int32),
+                lens=jnp.zeros(B, jnp.int32),
+                page_counts=jnp.zeros(B, jnp.int32),
+                active=jnp.zeros(B, bool),
+                budget=jnp.zeros(B, jnp.int32),
+                eos=jnp.full(B, -1, jnp.int32),
+                out_buf=jnp.zeros((B, max_new_cap), jnp.int32),
+                n_out=jnp.zeros(B, jnp.int32))
+            # host mirrors, advanced from the per-tick flag vector —
+            # never synced from device mid-flight
+            self._pages_host = np.zeros(B, np.int64)
+            self._nout_host = np.zeros(B, np.int64)
+            self._fail_streak = np.zeros(B, np.int64)
+        self._mega_fn = None
+        self._mega = None
+
         from repro.kernels.ops import resolve_lowering
         mem_words = int(np.prod(self.alloc_state.mem.shape))
         ctl_words = int(np.prod(self.alloc_state.ctl.shape))
@@ -137,11 +270,20 @@ class ServingEngine:
                       "alloc_txns": 0,
                       "defrag_waves": 0,
                       "rebalance_waves": 0,
-                      "pages_migrated": 0}
+                      "auto_defrag_waves": 0,
+                      "pages_migrated": 0,
+                      # decode-loop observability (DESIGN.md §11)
+                      "mega_step": self.mega_step,
+                      "launches_per_tick": None}
         self.refresh_frag_stats()
 
     # ---- request lifecycle -------------------------------------------------
     def submit(self, prompt, max_new_tokens=32, eos_id=None) -> int:
+        if self.mega_step and max_new_tokens > self.max_new_cap:
+            raise ValueError(
+                f"max_new_tokens={max_new_tokens} exceeds the mega-step "
+                f"device token buffer (max_new_cap={self.max_new_cap}); "
+                f"raise max_new_cap at engine construction")
         self._uid += 1
         self.waiting.append(Request(self._uid, np.asarray(prompt, np.int32),
                                     max_new_tokens, eos_id))
@@ -202,14 +344,33 @@ class ServingEngine:
 
     def _note_shard_pages(self, offs, delta: int):
         """Update per-shard live-page occupancy for granted/freed word
-        offsets; returns their owning shards."""
+        offsets; returns their owning shards.  In mega-step mode the
+        incremental count is skipped (mega grants never surface their
+        offsets to the host) — occupancy is recomputed from the device
+        page table instead (:meth:`_sync_shard_pages_from_table`)."""
         shard = offs // self._shard_words
-        np.add.at(self._shard_pages, shard, delta)
-        self.stats["shard_pages_live"] = [int(x) for x in
-                                          self._shard_pages]
+        if not self.mega_step:
+            np.add.at(self._shard_pages, shard, delta)
+            self.stats["shard_pages_live"] = [int(x) for x in
+                                              self._shard_pages]
         return shard
 
-    def _bulk_free(self, pages: List[int]):
+    def _sync_shard_pages_from_table(self):
+        """Recompute per-shard live-page occupancy from the device page
+        table (mega-step mode: the table is the only place the granted
+        ids live).  One small (B, P) device→host read — called on
+        demand (rebalance checks, stat refreshes), never per tick."""
+        kv = self._kv()
+        self._shard_pages[:] = 0
+        if kv is not None:
+            pt = np.asarray(kv.page_table)
+            pages = pt[pt >= 0]
+            shard = pages * self.wpp // self._shard_words
+            np.add.at(self._shard_pages, shard, 1)
+        self.stats["shard_pages_live"] = [int(x) for x in
+                                          self._shard_pages]
+
+    def _bulk_free(self, pages: List[int], count_stats: bool = True):
         if not pages:
             return
         lanes = max(self.max_batch * 2, len(pages))
@@ -219,7 +380,8 @@ class ServingEngine:
         mask = jnp.asarray(offs >= 0)
         self.alloc_state = self.ouro.free(
             self.alloc_state, jnp.asarray(offs), sizes, mask)
-        self.stats["frees"] += len(pages)
+        if count_stats:
+            self.stats["frees"] += len(pages)
         self._note_shard_pages(offs[offs >= 0], -1)
 
     def _map_pages(self, slot: int, upto_tokens: int):
@@ -261,8 +423,8 @@ class ServingEngine:
         every engine-side page reference through the forwarding table
         (KV page heaps + page tables + slot page lists).  Returns the
         number of pages migrated.  Triggered automatically on
-        allocation failure; also callable by operators between
-        batches."""
+        allocation failure and past ``defrag_threshold``; also callable
+        by operators between batches."""
         self.alloc_state, fwd = self.ouro.defrag(self.alloc_state)
         moved = self._apply_forwarding(fwd)
         self.stats["defrag_waves"] += 1
@@ -270,11 +432,29 @@ class ServingEngine:
         self.refresh_frag_stats()
         return moved
 
+    def _maybe_auto_defrag(self):
+        """Fire one defragmentation wave when ``frag_ratio`` exceeds
+        the configured ``defrag_threshold`` (checked every
+        ``defrag_check_interval`` steps; max over shards when sharded)
+        — the proactive complement to the allocation-failure retry.
+        Counted separately in ``stats["auto_defrag_waves"]``."""
+        if self.defrag_threshold is None:
+            return
+        if self.stats["steps"] % self.defrag_check_interval:
+            return
+        fs = self.refresh_frag_stats()
+        ratio = float(np.max(np.asarray(fs["frag_ratio"])))
+        if ratio > self.defrag_threshold:
+            self.defrag()
+            self.stats["auto_defrag_waves"] += 1
+
     def _maybe_rebalance(self):
         """One cross-shard rebalance wave when per-shard live pages
         diverge beyond ``rebalance_threshold`` (pages, max − min)."""
         if self.num_shards == 1 or self.rebalance_threshold is None:
             return
+        if self.mega_step:
+            self._sync_shard_pages_from_table()
         live = self._shard_pages
         if int(live.max() - live.min()) <= self.rebalance_threshold:
             return
@@ -288,7 +468,10 @@ class ServingEngine:
         """Remap every page reference the engine holds through a defrag
         forwarding table: KV page heaps move rows old→new, page tables
         and ``slot_pages`` rewrite ids, per-shard occupancy follows
-        pages that changed shards.  Returns pages migrated."""
+        pages that changed shards.  Returns pages migrated.  (In
+        mega-step mode the device page table is the only id holder —
+        ``slot_pages`` are empty mid-flight — so the KV remap alone
+        covers everything.)"""
         if not (np.asarray(fwd.src) >= 0).any():
             return 0
         max_span = self.ouro.cfg.words_per_chunk // self.wpp
@@ -312,8 +495,9 @@ class ServingEngine:
                         self._shard_pages[old_sh] -= 1
                         self._shard_pages[new_sh] += 1
                     pages[i] = mapping[p]
-        self.stats["shard_pages_live"] = [int(x) for x in
-                                          self._shard_pages]
+        if not self.mega_step:
+            self.stats["shard_pages_live"] = [int(x) for x in
+                                              self._shard_pages]
         return total
 
     def refresh_frag_stats(self):
@@ -366,57 +550,254 @@ class ServingEngine:
                            else self.caches._replace(kv=kv0))
             else:
                 caches0 = self.caches
-            logits, new_caches = self._prefill(self.params, batch, caches0)
-            self.caches = self._merge_row(new_caches, row_mask)
-            first = int(np.argmax(np.asarray(logits[slot])))
+            tok_ids, new_caches = self._prefill(self.params, batch,
+                                                caches0)
+            self.caches = merge_rows(self.cfg, new_caches, self.caches,
+                                     row_mask)
+            first = int(np.asarray(tok_ids)[slot])
             req.out_tokens.append(first)
             self.slot_req[slot] = req
             self.slot_len[slot] = lp + 1
+            if self.mega_step:
+                self._mega_admit(slot, req, first)
 
     def _merge_row(self, new_caches, row_mask):
-        """Keep only ``row_mask`` rows from a prefill's cache updates.
+        """Back-compat shim over :func:`merge_rows`."""
+        return merge_rows(self.cfg, new_caches, self.caches, row_mask)
 
-        Structure-aware (never shape-guessing — num_layers can equal
-        max_batch): page heaps are taken wholesale (disjoint by
-        construction: other rows' tables were hidden, writes dropped);
-        batch-first leaves merge on axis 0; layer-stacked state leaves
-        (Lr, B, ...) merge on axis 1."""
-        mask = jnp.asarray(row_mask)
+    # ---- fused decode mega-step (DESIGN.md §11) ----------------------------
 
-        def axis0(new, old):
-            if new is None or old is None:
-                return new
-            sel = mask.reshape((-1,) + (1,) * (new.ndim - 1))
-            return jnp.where(sel, new, old)
+    def _mega_admit(self, slot: int, req: Request, first: int):
+        """Push an admitted slot's control state to the device arrays.
 
-        def axis1(new, old):
-            if new is None or old is None:
-                return new
-            sel = mask.reshape((1, -1) + (1,) * (new.ndim - 2))
-            return jnp.where(sel, new, old)
+        Page ids granted at admission already live in the device page
+        table; hand ownership over entirely (``slot_pages`` is cleared
+        — from here on the table row is the only id holder, pulled
+        back once at retirement)."""
+        npages = len(self.slot_pages[slot])
+        self._pages_host[slot] = npages
+        self.slot_pages[slot] = []
+        self._nout_host[slot] = 1
+        self._fail_streak[slot] = 0
+        ms = self.mega_state
+        eos = -1 if req.eos_id is None else int(req.eos_id)
+        self.mega_state = MegaState(
+            last_tok=ms.last_tok.at[slot].set(first),
+            lens=ms.lens.at[slot].set(int(self.slot_len[slot])),
+            page_counts=ms.page_counts.at[slot].set(npages),
+            active=ms.active.at[slot].set(True),
+            budget=ms.budget.at[slot].set(req.max_new_tokens - 1),
+            eos=ms.eos.at[slot].set(eos),
+            out_buf=ms.out_buf.at[slot].set(0).at[slot, 0].set(first),
+            n_out=ms.n_out.at[slot].set(1))
 
-        old = self.caches
+    def _build_mega(self):
+        """Trace+compile the fused decode tick: grow → scatter →
+        forward → sample → advance, ONE jitted function with the whole
+        carry (arena, KV caches, slot state) donated."""
+        cfg = self.cfg
+        model = self.model
+        ouro = self.ouro
+        page, page_bytes, wpp = self.page, self.page_bytes, self.wpp
+        B, S = self.max_batch, self.num_shards
+        lanes = B  # decode grows ≤ 1 page per slot per tick
+        cap = self.max_new_cap
+        dtype = self.compute_dtype
+        homes = jnp.arange(B, dtype=jnp.int32) % S
+        has_kv = self._kv() is not None
 
-        def merge_kv(new_kv, old_kv):
-            if new_kv is None:
-                return None
-            return new_kv._replace(
-                layers=new_kv.layers,  # wholesale: disjoint heap rows
-                page_table=axis0(new_kv.page_table, old_kv.page_table),
-                seq_lens=axis0(new_kv.seq_lens, old_kv.seq_lens))
+        def mega(params, alloc_state, caches, ms):
+            kv = caches.self_kv if cfg.is_encdec else caches.kv
+            if has_kv:
+                # (a) per-slot page need from device-resident state
+                need = jnp.maximum(
+                    -(-(ms.lens + 1) // page) - ms.page_counts, 0)
+                need = jnp.where(ms.active, need, 0).astype(jnp.int32)
+                # (b) bulk grow: ONE arena transaction for the batch
+                alloc_state, offs, l_slot, l_rank, l_mask = ouro.grow(
+                    alloc_state, need, page_bytes, lanes,
+                    home=homes if S > 1 else None)
+                ok = l_mask & (offs >= 0)
+                granted = jnp.zeros(B + 1, jnp.int32).at[
+                    jnp.where(l_mask, l_slot, B)].add(
+                        ok.astype(jnp.int32))[:B]
+                # a slot fails the tick when ANY of its pages did —
+                # its partial grants are withheld from the table and
+                # reclaimed by the host-side defrag-retry path
+                failed = ms.active & (granted < need)
+                grant_ok = ok & ~failed[l_slot]
+                # (c) grants → device page table, straight from the
+                # arena word offsets (no host-materialized table)
+                kv = kv._replace(page_table=KV.scatter_grant_words(
+                    kv.page_table, ms.page_counts, l_slot, l_rank,
+                    offs, grant_ok, wpp))
+                caches = (caches._replace(self_kv=kv) if cfg.is_encdec
+                          else caches._replace(kv=kv))
+                new_counts = ms.page_counts + jnp.where(failed, 0, need)
+            else:  # attention-free family: O(1) state, nothing to grow
+                failed = jnp.zeros(B, bool)
+                offs = jnp.full(lanes, -1, jnp.int32)
+                l_slot = jnp.zeros(lanes, jnp.int32)
+                l_mask = jnp.zeros(lanes, bool)
+                new_counts = ms.page_counts
+            advance = ms.active & ~failed
+            # (d) model forward with paged attention; failed/inactive
+            # rows write to table holes (dropped) and their cache
+            # advance is masked back out below
+            logits, new_caches = model.decode_step(
+                params, ms.last_tok[:, None], caches, dtype=dtype)
+            caches = merge_rows(cfg, new_caches, caches, advance)
+            # (e) greedy sampling + seq/token advance, all on device
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+            out_buf = ms.out_buf.at[
+                jnp.where(advance, jnp.arange(B, dtype=jnp.int32), B),
+                jnp.minimum(ms.n_out, cap - 1)].set(nxt, mode="drop")
+            budget = ms.budget - advance.astype(jnp.int32)
+            finished = advance & (
+                (budget <= 0) | ((ms.eos >= 0) & (nxt == ms.eos)))
+            ms2 = MegaState(
+                last_tok=jnp.where(advance, nxt, ms.last_tok),
+                lens=ms.lens + advance.astype(jnp.int32),
+                page_counts=new_counts,
+                active=ms.active & ~finished,
+                budget=budget,
+                eos=ms.eos,
+                out_buf=out_buf,
+                n_out=ms.n_out + advance.astype(jnp.int32))
+            # the ONLY per-tick host sync: bit 0 finished, bit 1 failed
+            flags = (finished.astype(jnp.uint8)
+                     | (failed.astype(jnp.uint8) << 1))
+            return alloc_state, caches, ms2, flags, offs, l_slot, l_mask
 
-        if self.cfg.is_encdec:
-            return new_caches._replace(
-                self_kv=merge_kv(new_caches.self_kv, old.self_kv),
-                cross_k=axis1(new_caches.cross_k, old.cross_k),
-                cross_v=axis1(new_caches.cross_v, old.cross_v),
-                enc_valid=(axis0(new_caches.enc_valid, old.enc_valid)
-                           if new_caches.enc_valid is not None
-                           else old.enc_valid))
-        return new_caches._replace(
-            kv=merge_kv(new_caches.kv, old.kv),
-            ssm_h=axis1(new_caches.ssm_h, old.ssm_h),
-            ssm_conv=axis1(new_caches.ssm_conv, old.ssm_conv))
+        self._mega_fn = mega
+        self._mega = jax.jit(mega, donate_argnums=(1, 2, 3))
+
+    def launches_per_tick(self) -> int:
+        """``pallas_call`` launch count of ONE fused decode tick, read
+        off the mega-step jaxpr (kernels/ops.count_pallas_calls — the
+        same counter as the per-transaction and per-wave proofs).
+        Constant in ``max_batch`` by construction: the tick is one
+        jitted program and the grow transaction rides a single kernel.
+        Recorded into ``stats["launches_per_tick"]``; benchmarks/
+        common.launches_per_tick delegates here so fig8 records and
+        engine stats can never disagree."""
+        if not self.mega_step:
+            raise ValueError("launches_per_tick requires mega_step=True")
+        if self._mega is None:
+            self._build_mega()
+        from repro.kernels.ops import count_pallas_calls
+        jx = jax.make_jaxpr(self._mega_fn)(
+            self.params, self.alloc_state, self.caches, self.mega_state)
+        n = count_pallas_calls(jx)
+        self.stats["launches_per_tick"] = n
+        return n
+
+    def _step_mega(self) -> List[Request]:
+        """One fused decode tick + control-plane follow-up: dispatch
+        the mega-step, sync the (B,) flag vector, advance the host
+        mirrors, reclaim/retry on allocation failure, retire finished
+        slots (the only point page ids and tokens are pulled back)."""
+        active = [s for s in range(self.max_batch)
+                  if self.slot_req[s] is not None]
+        if not active:
+            return []
+        if self._mega is None:
+            self._build_mega()
+        (self.alloc_state, self.caches, self.mega_state, flags,
+         l_offs, l_slot, l_mask) = self._mega(
+            self.params, self.alloc_state, self.caches, self.mega_state)
+        flags = np.asarray(flags)          # the per-tick host sync
+        fin = (flags & 1) > 0
+        fail = (flags & 2) > 0
+        has_kv = self._kv() is not None
+
+        # host mirrors advance deterministically from the flags — the
+        # grant count is recomputed with the SAME need formula the
+        # device used, so allocs/frees stay exactly balanced
+        grants = 0
+        for s in active:
+            if fail[s]:
+                self.stats["alloc_failures"] += 1
+                continue
+            if has_kv:
+                missing = (-(-(int(self.slot_len[s]) + 1) // self.page)
+                           - int(self._pages_host[s]))
+                grants += max(missing, 0)
+                self._pages_host[s] += max(missing, 0)
+            self.slot_len[s] += 1
+            self._nout_host[s] += 1
+        if has_kv:
+            self.stats["alloc_txns"] += 1
+            self.stats["allocs"] += grants
+
+        if fail.any():
+            self._recover_failed(fail, l_offs, l_slot, l_mask)
+        else:
+            self._fail_streak[:] = 0
+
+        finished = []
+        for s in np.nonzero(fin)[0]:
+            finished.append(self._release_mega(int(s)))
+        return finished
+
+    def _recover_failed(self, fail, l_offs, l_slot, l_mask):
+        """Alloc-failure path (host-side, as in the host loop): pull
+        the lane arrays (failure ticks only), return the failed slots'
+        partial grants to the heap, run ONE defrag wave, and let the
+        next tick retry — two consecutive failed retries mean the heap
+        is genuinely exhausted."""
+        offs_h = np.asarray(l_offs)
+        slot_h = np.asarray(l_slot)
+        mask_h = np.asarray(l_mask)
+        leaked = mask_h & (offs_h >= 0) & fail[slot_h]
+        self._free_offsets(offs_h[leaked])
+        self.defrag()
+        self._fail_streak[fail] += 1
+        self._fail_streak[~fail] = 0
+        if (self._fail_streak >= 2).any():
+            raise MemoryError("KV heap exhausted mid-flight")
+
+    def _free_offsets(self, offs_words):
+        """Uncounted bulk free of raw word offsets (failure recovery:
+        these grants were never counted as allocs either)."""
+        if len(offs_words) == 0:
+            return
+        self._bulk_free([int(o) // self.wpp for o in offs_words],
+                        count_stats=False)
+
+    def _release_mega(self, slot: int) -> Request:
+        """Retire one finished slot: pull its token row and page-table
+        row from device (the only mid-flight device→host reads besides
+        the flag vector), free the pages, and zero the slot's device
+        state."""
+        req = self.slot_req[slot]
+        n = int(self._nout_host[slot])
+        buf = np.asarray(self.mega_state.out_buf[slot])
+        req.out_tokens = [int(x) for x in buf[:n]]
+        req.done = True
+        kv = self._kv()
+        if kv is not None:
+            row = np.asarray(kv.page_table[slot])
+            self._bulk_free([int(p) for p in row[row >= 0]])
+            pt = kv.page_table.at[slot].set(-1)
+            sl = kv.seq_lens.at[slot].set(0)
+            self._set_kv(kv._replace(page_table=pt, seq_lens=sl))
+        ms = self.mega_state
+        self.mega_state = MegaState(
+            last_tok=ms.last_tok.at[slot].set(0),
+            lens=ms.lens.at[slot].set(0),
+            page_counts=ms.page_counts.at[slot].set(0),
+            active=ms.active.at[slot].set(False),
+            budget=ms.budget.at[slot].set(0),
+            eos=ms.eos.at[slot].set(-1),
+            out_buf=ms.out_buf,
+            n_out=ms.n_out.at[slot].set(0))
+        self.slot_req[slot] = None
+        self.slot_len[slot] = 0
+        self._pages_host[slot] = 0
+        self._nout_host[slot] = 0
+        self._fail_streak[slot] = 0
+        return req
 
     # ---- main loop -----------------------------------------------------------
     def _grow_active(self, active: List[int]):
@@ -439,11 +820,10 @@ class ServingEngine:
             raise MemoryError("KV heap exhausted mid-flight")
         self._map_granted(slots, got)
 
-    def step(self) -> List[Request]:
-        """Admit, grow pages, decode one token for all active slots,
-        retire finished requests.  Returns requests finished this step."""
-        self._admit()
-        self._maybe_rebalance()
+    def _step_host(self) -> List[Request]:
+        """Host-loop decode tick: grow pages (host computes need),
+        decode one token for all active slots (token ids — not logits
+        — cross the device boundary), retire finished requests."""
         active = [s for s in range(self.max_batch)
                   if self.slot_req[s] is not None]
         finished = []
@@ -452,9 +832,9 @@ class ServingEngine:
             toks = np.zeros((self.max_batch, 1), np.int32)
             for s in active:
                 toks[s, 0] = self.slot_req[s].out_tokens[-1]
-            logits, self.caches = self._decode(
+            tok_ids, self.caches = self._decode(
                 self.params, jnp.asarray(toks), self.caches)
-            nxt = np.asarray(jnp.argmax(logits, -1))
+            nxt = np.asarray(tok_ids)
             for s in active:
                 req = self.slot_req[s]
                 req.out_tokens.append(int(nxt[s]))
@@ -466,7 +846,18 @@ class ServingEngine:
                     req.done = True
                     finished.append(req)
                     self._release(s)
+        return finished
+
+    def step(self) -> List[Request]:
+        """Admit, decode one token for all active slots (fused
+        mega-step or host loop), retire finished requests.  Returns
+        requests finished this step."""
+        self._admit()
+        self._maybe_rebalance()
+        finished = (self._step_mega() if self.mega_step
+                    else self._step_host())
         self.stats["steps"] += 1
+        self._maybe_auto_defrag()
         return finished
 
     def _release(self, slot: int):
@@ -487,3 +878,10 @@ class ServingEngine:
             if not self.waiting and all(r is None for r in self.slot_req):
                 break
         return out
+
+
+def _tokens_of(model_out):
+    """(logits, caches) → (greedy token ids, caches): the argmax runs
+    inside the jit so only (B,) int32 ids are ever fetched."""
+    logits, caches = model_out
+    return jnp.argmax(logits, -1).astype(jnp.int32), caches

@@ -32,6 +32,11 @@ def pytest_configure(config):
         "defrag: exercises the live defragmentation subsystem "
         "(core/defrag.py, kernels/defrag_txn.py, DESIGN.md §10; wired "
         "into the forced-blocked and nightly CI jobs)")
+    config.addinivalue_line(
+        "markers",
+        "serve: exercises the serving engine's fused decode mega-step "
+        "(serve/engine.py, DESIGN.md §11; the forced-blocked CI job "
+        "runs the mega-vs-host parity suite under this marker)")
 
 
 def pytest_collection_modifyitems(config, items):

@@ -74,6 +74,26 @@ def test_paged_attention_sweep(B, Hq, Hkv, D, page, P, dtype, rng):
     np.testing.assert_allclose(got, want, atol=tol, rtol=tol)
 
 
+def test_paged_attention_word_offset_table(rng):
+    """Mega-step table format: ``page_table`` holding raw arena WORD
+    offsets (page id × wpp, holes −1) with ``wpp`` passed through must
+    match the page-id table exactly — the division happens in the
+    scalar-prefetch index map, and −1 holes stay invalid under floor
+    division."""
+    B, Hq, Hkv, D, page, P, wpp = 2, 8, 2, 128, 16, 6, 64
+    NP = B * P + 4
+    q = jnp.asarray(rng.standard_normal((B, Hq, D)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((NP, page, Hkv, D)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((NP, page, Hkv, D)), jnp.float32)
+    pt = jnp.asarray(rng.choice(NP, (B, P), replace=False), jnp.int32)
+    pt = pt.at[0, P - 1:].set(-1)
+    sl = jnp.asarray(rng.integers(1, (P - 1) * page, B), jnp.int32)
+    want = ops.paged_attention(q, kp, vp, pt, sl)
+    words = jnp.where(pt >= 0, pt * wpp, -1)
+    got = ops.paged_attention(q, kp, vp, words, sl, wpp=wpp)
+    np.testing.assert_array_equal(got, want)
+
+
 # ---- ssd_scan ------------------------------------------------------------------
 
 @pytest.mark.parametrize("B,L,H,P,G,N,chunk", [

@@ -1,0 +1,275 @@
+"""Fused decode mega-step tests (serve/engine.py, DESIGN.md §11).
+
+The contract under test: ``mega_step=True`` produces token streams
+IDENTICAL to the host-loop decode — across allocator backends,
+lowerings, and shard counts — while executing grow + forward + sample
+as ONE jitted tick whose kernel-launch count is independent of
+``max_batch``.  Failure recovery (defrag-retry on page exhaustion) and
+the proactive ``defrag_threshold`` trigger ride the same suite.
+
+Everything runs float32 (kv + compute): greedy argmax parity must be
+bit-exact, not merely close.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.models.model import build_model
+
+pytestmark = pytest.mark.serve
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = get_arch("qwen2-0.5b").smoke()
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    return cfg, m, params
+
+
+def _run(tiny_model, mega, *, n_req=4, max_new=5, seed=0, **kw):
+    from repro.serve.engine import ServingEngine
+    cfg, m, params = tiny_model
+    eng = ServingEngine(m, params, max_batch=3, max_seq=96,
+                        kv_dtype=jnp.float32, compute_dtype=jnp.float32,
+                        mega_step=mega, **kw)
+    rng = np.random.default_rng(seed)
+    for _ in range(n_req):
+        eng.submit(rng.integers(2, cfg.vocab_size,
+                                int(rng.integers(4, 30))),
+                   max_new_tokens=max_new)
+    done = eng.run_until_done(300)
+    assert len(done) == n_req
+    return {r.uid: r.out_tokens for r in done}, eng
+
+
+@pytest.fixture(scope="module")
+def host_tokens(tiny_model):
+    """Host-loop reference streams (jnp backend — the oracle)."""
+    toks, eng = _run(tiny_model, False)
+    assert eng.stats["frees"] == eng.stats["allocs"]
+    return toks
+
+
+@pytest.mark.parametrize("backend,lowering,shards", [
+    ("jnp", "auto", 1),
+    ("jnp", "auto", 4),
+    ("pallas", "whole", 1),
+    ("pallas", "blocked", 1),
+    ("pallas", "auto", 4),
+])
+def test_mega_matches_host_loop(tiny_model, host_tokens, backend,
+                                lowering, shards):
+    """Token-for-token: the fused tick replays the host loop exactly,
+    whatever transaction backend/lowering/shard count grows the KV
+    heap underneath it."""
+    toks, eng = _run(tiny_model, True, alloc_backend=backend,
+                     alloc_lowering=lowering, num_shards=shards)
+    assert toks == host_tokens
+    assert eng.stats["frees"] == eng.stats["allocs"]
+    assert eng.stats["alloc_failures"] == 0
+    assert eng.stats["mega_step"] is True
+
+
+def test_mega_handles_max_new_one(tiny_model):
+    """Finish-semantics edge: ``max_new_tokens=1`` yields TWO tokens on
+    the host path (prefill token + the decode append that detects the
+    budget); the mega budget accounting must reproduce that, not
+    truncate at one."""
+    h, _ = _run(tiny_model, False, n_req=2, max_new=1)
+    g, _ = _run(tiny_model, True, n_req=2, max_new=1)
+    assert h == g
+    assert all(len(t) == 2 for t in g.values())
+
+
+def test_mega_eos_parity(tiny_model):
+    """EOS early-exit fires on the same tick in both modes: pick the
+    token the reference emits mid-stream as eos_id and rerun."""
+    from repro.serve.engine import ServingEngine
+    cfg, m, params = tiny_model
+    h, _ = _run(tiny_model, False, n_req=2, max_new=6, seed=3)
+    eos = h[1][2]  # third emitted token of request 1
+
+    def gen(mega):
+        eng = ServingEngine(m, params, max_batch=3, max_seq=96,
+                            kv_dtype=jnp.float32,
+                            compute_dtype=jnp.float32, mega_step=mega)
+        rng = np.random.default_rng(3)
+        for _ in range(2):
+            eng.submit(rng.integers(2, cfg.vocab_size,
+                                    int(rng.integers(4, 30))),
+                       max_new_tokens=6, eos_id=eos)
+        done = eng.run_until_done(300)
+        return {r.uid: r.out_tokens for r in done}
+
+    a, b = gen(False), gen(True)
+    assert a == b
+    assert len(a[1]) < 6  # the eos actually cut request 1 short
+
+
+def test_mega_launch_count_constant_in_batch(tiny_model):
+    """The tentpole claim: launches per fused tick read off the jaxpr
+    — exactly ONE pallas_call with alloc_backend="pallas" (the bulk
+    grow transaction; decode attention rides the jnp paged path), zero
+    with the jnp oracle, and the SAME at any max_batch."""
+    from benchmarks.common import launches_per_tick
+    from repro.serve.engine import ServingEngine
+    cfg, m, params = tiny_model
+    counts = {}
+    for backend in ("jnp", "pallas"):
+        per_batch = []
+        for mb in (2, 8):
+            eng = ServingEngine(m, params, max_batch=mb, max_seq=96,
+                                kv_dtype=jnp.float32,
+                                compute_dtype=jnp.float32,
+                                mega_step=True, alloc_backend=backend)
+            n = launches_per_tick(eng)
+            assert eng.stats["launches_per_tick"] == n
+            per_batch.append(n)
+        assert per_batch[0] == per_batch[1], (backend, per_batch)
+        counts[backend] = per_batch[0]
+    assert counts == {"jnp": 0, "pallas": 1}
+
+
+def test_mega_requires_flag(tiny_model):
+    from repro.serve.engine import ServingEngine
+    cfg, m, params = tiny_model
+    eng = ServingEngine(m, params, max_batch=2, max_seq=64,
+                        kv_dtype=jnp.float32)
+    with pytest.raises(ValueError, match="mega_step"):
+        eng.launches_per_tick()
+
+
+def test_mega_rejects_overlong_request(tiny_model):
+    """The device token buffer is sized at construction; a submit past
+    it must fail loudly at submit time, not corrupt out_buf later."""
+    from repro.serve.engine import ServingEngine
+    cfg, m, params = tiny_model
+    eng = ServingEngine(m, params, max_batch=2, max_seq=64,
+                        kv_dtype=jnp.float32, mega_step=True,
+                        max_new_cap=8)
+    with pytest.raises(ValueError, match="max_new_cap"):
+        eng.submit(np.arange(2, 10), max_new_tokens=9)
+
+
+def test_decode_syncs_token_ids_not_logits(tiny_model):
+    """Legacy-path fix: the jitted decode/prefill entries argmax ON
+    DEVICE — the host fetch is (B,) int32 ids, never (B, vocab)
+    logits."""
+    from repro.serve.engine import ServingEngine
+    cfg, m, params = tiny_model
+    eng = ServingEngine(m, params, max_batch=3, max_seq=96,
+                        kv_dtype=jnp.float32)
+    toks = jnp.zeros((3, 1), jnp.int32)
+    ids, _ = jax.eval_shape(eng._decode, params, toks, eng.caches)
+    assert ids.shape == (3,) and ids.dtype == jnp.int32
+
+
+@pytest.mark.defrag
+def test_mega_recovers_from_exhaustion(tiny_model):
+    """The exhaustion-recovery trace of test_defrag, replayed through
+    the mega-step: alloc failure surfaces in the per-tick flags, the
+    host reclaims the failed slots' partial grants, runs a defrag
+    wave, and the retried ticks produce the SAME streams the host
+    loop does."""
+    from repro.serve.engine import ServingEngine
+    cfg, m, params = tiny_model
+
+    def trace(mega):
+        eng = ServingEngine(m, params, max_batch=2, max_seq=64,
+                            kv_dtype=jnp.float32,
+                            compute_dtype=jnp.float32, num_pages=16,
+                            mega_step=mega)
+        n = 16
+        big = jnp.full(n, 2048, jnp.int32)
+        st, offs = eng.ouro.alloc(eng.alloc_state, big,
+                                  jnp.ones(n, bool))
+        granted = np.asarray(offs) >= 0
+        assert granted.any()
+        eng.alloc_state = eng.ouro.free(st, offs, big,
+                                        jnp.asarray(granted))
+        rng = np.random.default_rng(1)
+        for _ in range(2):
+            eng.submit(rng.integers(2, cfg.vocab_size, 40),
+                       max_new_tokens=8)
+        done = eng.run_until_done(100)
+        assert len(done) == 2
+        return sorted(tuple(r.out_tokens) for r in done), eng
+
+    h, _ = trace(False)
+    g, eng = trace(True)
+    assert h == g
+    assert eng.stats["defrag_waves"] > 0
+    assert eng.stats["frees"] == eng.stats["allocs"]
+
+
+@pytest.mark.defrag
+def test_mega_raises_when_heap_truly_exhausted(tiny_model):
+    """When defrag cannot reclaim (a co-tenant HOLDS the heap live),
+    both decode paths raise the same MemoryError instead of spinning."""
+    from repro.serve.engine import ServingEngine
+    cfg, m, params = tiny_model
+
+    def run(mega):
+        eng = ServingEngine(m, params, max_batch=2, max_seq=64,
+                            kv_dtype=jnp.float32,
+                            compute_dtype=jnp.float32, num_pages=16,
+                            mega_step=mega)
+        # co-tenant takes every 256 B page, hands exactly 2 back:
+        # enough to admit a 30-token prompt, not enough to grow.
+        sizes = jnp.full(64, 256, jnp.int32)
+        eng.alloc_state, offs = eng.ouro.alloc(
+            eng.alloc_state, sizes, jnp.ones(64, bool))
+        offs = np.asarray(offs)
+        held = offs[offs >= 0]
+        back = np.full(64, -1, np.int32)
+        back[:2] = held[:2]
+        eng.alloc_state = eng.ouro.free(
+            eng.alloc_state, jnp.asarray(back), sizes,
+            jnp.asarray(back >= 0))
+        eng.submit(np.random.default_rng(1).integers(
+            2, cfg.vocab_size, 30), max_new_tokens=30)
+        with pytest.raises(MemoryError, match="exhausted mid-flight"):
+            eng.run_until_done(200)
+
+    run(False)
+    run(True)
+
+
+@pytest.mark.defrag
+def test_auto_defrag_threshold_trigger(tiny_model):
+    """S1: past ``defrag_threshold`` the engine fires a proactive
+    defrag wave mid-serve (counted in ``auto_defrag_waves``); with the
+    default ``None`` it never does."""
+    from repro.serve.engine import ServingEngine
+    cfg, m, params = tiny_model
+    for thresh, fires in ((0.05, True), (None, False)):
+        eng = ServingEngine(m, params, max_batch=2, max_seq=64,
+                            kv_dtype=jnp.float32, num_pages=32,
+                            defrag_threshold=thresh)
+        # checkerboard co-tenant: free every other page → high
+        # frag_ratio that persists while the engine serves
+        sizes = jnp.full(32, 256, jnp.int32)
+        eng.alloc_state, offs = eng.ouro.alloc(
+            eng.alloc_state, sizes, jnp.ones(32, bool))
+        offs = np.asarray(offs)
+        odd = (np.arange(32) % 2 == 0) & (offs >= 0)
+        eng.alloc_state = eng.ouro.free(eng.alloc_state,
+                                        jnp.asarray(offs), sizes,
+                                        jnp.asarray(odd))
+        eng.submit(np.arange(2, 20) % cfg.vocab_size, max_new_tokens=4)
+        eng.run_until_done(50)
+        assert (eng.stats["auto_defrag_waves"] >= 1) == fires
+
+
+def test_engine_validates_defrag_knobs(tiny_model):
+    from repro.serve.engine import ServingEngine
+    with pytest.raises(ValueError, match="defrag_threshold"):
+        ServingEngine(None, None, defrag_threshold=1.5)
+    with pytest.raises(ValueError, match="defrag_check_interval"):
+        ServingEngine(None, None, defrag_check_interval=0)
+    with pytest.raises(ValueError, match="max_new_cap"):
+        ServingEngine(None, None, max_new_cap=0)
