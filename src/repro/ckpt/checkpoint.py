@@ -8,6 +8,28 @@ committed dirs).  ``save_async`` snapshots to host memory synchronously
 step loop keeps running.  Restore can re-shard onto a different mesh:
 pass target shardings and each leaf is device_put accordingly — the
 elastic-rescale path (ft/runtime.py) reuses this.
+
+Three hardening contracts the serving-arena snapshot path leans on:
+
+- **Exact key→file map.**  Leaf filenames are sanitized leaf paths, so
+  two distinct paths can collide after sanitization; ``_write``
+  disambiguates colliding filenames with a ``__<n>`` suffix and
+  ``meta.json`` records the exact mapping — ``restore`` reads files
+  only through the map, never by re-sanitizing.
+- **Raw-dtype fidelity.**  Non-native dtypes (bfloat16 & friends) save
+  as raw bytes but ``np.load`` hands them back as void records;
+  ``restore`` reinterprets through the dtype string recorded in
+  ``meta.json``, so a bf16 KV heap round-trips bit-exactly.
+- **Retention never races restore off a cliff.**  ``_retain`` always
+  keeps the newest committed step (even ``keep=0``), and ``restore``
+  falls back to the next-newest committed step when the one it
+  selected vanished mid-read (the AsyncCheckpointer's daemon-thread
+  keep-k sweep can delete between the directory listing and the
+  ``meta.json`` open).
+
+``save(..., extra=...)`` stores a small JSON-serializable sidecar in
+``meta.json`` (the serving engine keeps its request queue and layout
+fingerprint there); ``read_meta`` returns the whole committed record.
 """
 from __future__ import annotations
 
@@ -34,15 +56,27 @@ def _flatten(tree):
     return out, treedef
 
 
-def save(state, directory: str, step: int, keep: int = 3) -> str:
-    """Synchronous atomic save.  Returns the committed path."""
+def _dtype_of(name: str) -> np.dtype:
+    """Dtype from its recorded string — numpy natives directly,
+    extension dtypes (bfloat16, float8_*, ...) via ml_dtypes."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def save(state, directory: str, step: int, keep: int = 3,
+         extra: Optional[dict] = None) -> str:
+    """Synchronous atomic save.  ``extra``: JSON-serializable sidecar
+    stored in meta.json.  Returns the committed path."""
     flat, _ = _flatten(state)
     host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()
             if v is not None}
-    return _write(host, directory, step, keep)
+    return _write(host, directory, step, keep, extra)
 
 
-def _write(host, directory, step, keep):
+def _write(host, directory, step, keep, extra=None):
     os.makedirs(directory, exist_ok=True)
     final = os.path.join(directory, f"step_{step:08d}")
     tmp = final + ".tmp"
@@ -50,8 +84,20 @@ def _write(host, directory, step, keep):
         shutil.rmtree(tmp)
     os.makedirs(tmp)
     meta = {"step": step, "leaves": {}}
+    if extra is not None:
+        meta["extra"] = extra
+    used = set()
     for k, v in host.items():
-        fn = re.sub(r"[^A-Za-z0-9_.|-]", "_", k) + ".npy"
+        base = re.sub(r"[^A-Za-z0-9_.|-]", "_", k)
+        # sanitization is lossy: two distinct leaf paths can map to the
+        # same filename — suffix until unique so the later leaf cannot
+        # silently overwrite the earlier one (meta records the exact
+        # key→file map either way, and restore reads only through it)
+        fn, n = base + ".npy", 0
+        while fn in used:
+            n += 1
+            fn = f"{base}__{n}.npy"
+        used.add(fn)
         np.save(os.path.join(tmp, fn), v)
         meta["leaves"][k] = {"file": fn, "shape": list(v.shape),
                              "dtype": str(v.dtype)}
@@ -65,6 +111,10 @@ def _write(host, directory, step, keep):
 
 
 def _retain(directory, keep):
+    # never retain away the newest committed checkpoint: a concurrent
+    # restore may have just selected it, and a directory whose every
+    # step can vanish is not a checkpoint directory
+    keep = max(int(keep), 1)
     steps = sorted(d for d in os.listdir(directory)
                    if re.fullmatch(r"step_\d{8}", d))
     for d in steps[:-keep]:
@@ -79,13 +129,14 @@ class AsyncCheckpointer:
         self.keep = keep
         self._thread: Optional[threading.Thread] = None
 
-    def save(self, state, step: int):
+    def save(self, state, step: int, extra: Optional[dict] = None):
         self.wait()
         flat, _ = _flatten(state)
         host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()
                 if v is not None}
         self._thread = threading.Thread(
-            target=_write, args=(host, self.directory, step, self.keep),
+            target=_write,
+            args=(host, self.directory, step, self.keep, extra),
             daemon=True)
         self._thread.start()
 
@@ -95,22 +146,66 @@ class AsyncCheckpointer:
             self._thread = None
 
 
-def latest_step(directory: str) -> Optional[int]:
+def committed_steps(directory: str):
+    """All committed step numbers under ``directory``, ascending."""
     if not os.path.isdir(directory):
-        return None
-    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
-             if re.fullmatch(r"step_\d{8}", d)]
-    return max(steps) if steps else None
+        return []
+    return sorted(int(d.split("_")[1]) for d in os.listdir(directory)
+                  if re.fullmatch(r"step_\d{8}", d))
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = committed_steps(directory)
+    return steps[-1] if steps else None
+
+
+def read_meta(directory: str, step: Optional[int] = None):
+    """The committed ``meta.json`` record as ``(meta, step)``.  With
+    ``step=None`` picks the newest committed step, falling back past
+    steps a concurrent retention sweep removed mid-read."""
+    candidates = ([step] if step is not None
+                  else list(reversed(committed_steps(directory))))
+    if not candidates:
+        raise FileNotFoundError(f"no checkpoints under {directory}")
+    err = None
+    for s in candidates:
+        try:
+            d = os.path.join(directory, f"step_{s:08d}")
+            with open(os.path.join(d, "meta.json")) as f:
+                return json.load(f), s
+        except FileNotFoundError as e:
+            err = e
+    raise FileNotFoundError(
+        f"every committed step under {directory} vanished mid-read "
+        f"(candidates {candidates})") from err
 
 
 def restore(template: Any, directory: str,
             step: Optional[int] = None, shardings: Any = None):
     """Restore into the structure of ``template`` (None leaves stay
     None).  ``shardings``: optional matching pytree of NamedShardings —
-    the re-shard-on-restore path for elastic rescale."""
-    step = latest_step(directory) if step is None else step
-    if step is None:
+    the re-shard-on-restore path for elastic rescale.  When ``step`` is
+    None, restores the newest committed step, falling back to the
+    next-newest if a concurrent keep-k sweep deleted the selected one
+    between the directory listing and the read."""
+    candidates = ([step] if step is not None
+                  else list(reversed(committed_steps(directory))))
+    if not candidates:
         raise FileNotFoundError(f"no checkpoints under {directory}")
+    err = None
+    for s in candidates:
+        try:
+            return _load(template, directory, s, shardings), s
+        except FileNotFoundError as e:
+            if step is not None:
+                raise
+            err = e
+    raise FileNotFoundError(
+        f"every committed step under {directory} vanished mid-read "
+        f"(candidates {candidates})") from err
+
+
+def _load(template, directory, step, shardings):
     d = os.path.join(directory, f"step_{step:08d}")
     with open(os.path.join(d, "meta.json")) as f:
         meta = json.load(f)
@@ -124,8 +219,14 @@ def restore(template: Any, directory: str,
             continue
         info = meta["leaves"][k]
         arr = np.load(os.path.join(d, info["file"]))
+        want = _dtype_of(info["dtype"])
+        if arr.dtype != want:
+            # extension dtypes (bfloat16 &c) come back as raw void
+            # records from np.load — reinterpret through the recorded
+            # dtype so the bytes mean what they meant at save time
+            arr = arr.view(want)
         sh = shard_flat.get(k)
         out[k] = jax.device_put(arr, sh) if sh is not None else \
             jax.numpy.asarray(arr)
     leaves = [out[k] for k in flat.keys()]
-    return jax.tree_util.tree_unflatten(treedef, leaves), step
+    return jax.tree_util.tree_unflatten(treedef, leaves)

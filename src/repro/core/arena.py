@@ -166,7 +166,13 @@ class ArenaLayout:
         """Human-readable offset table (DESIGN.md §7 is rendered from
         this, and a test pins the two together).  ``blocks=True``
         appends each region's blocked-lowering treatment (DESIGN.md §8;
-        tests/test_arena_golden.py pins both renderings)."""
+        tests/test_arena_golden.py pins both renderings).
+
+        The ``blocks=False`` rendering is ALSO the arena half of the
+        serving snapshot fingerprint (DESIGN.md §12): a snapshotted
+        arena word image restores only into an engine whose layout
+        renders identically, so changing this string invalidates
+        existing snapshots — loudly, which is the point."""
         lines = [f"arena(kind={self.kind}, family={self.family}): "
                  f"mem {self.mem_words} words, ctl {self.ctl_words} words"]
         for r in self.regions:

@@ -125,7 +125,11 @@ class ShardLayout:
 
     def describe(self, blocks: bool = False) -> str:
         """Human-readable shard table + the per-shard §7/§8 rendering
-        (DESIGN.md §9 embeds this; tests pin doc and code together)."""
+        (DESIGN.md §9 embeds this; tests pin doc and code together).
+        Like ``ArenaLayout.describe``, the ``blocks=False`` rendering
+        doubles as the serving snapshot fingerprint's layout field
+        (DESIGN.md §12) — changing it invalidates existing sharded
+        snapshots loudly."""
         S = self.num_shards
         lines = [
             f"sharded arena(kind={self.kind}, family={self.family}, "

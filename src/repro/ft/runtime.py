@@ -73,16 +73,23 @@ class StepMonitor:
         self._t0 = time.perf_counter()
 
     def stop(self) -> dict:
+        if self._t0 is None:
+            raise RuntimeError(
+                "StepMonitor.stop() without a matching start()")
         dt = time.perf_counter() - self._t0
+        self._t0 = None
         self._count += 1
         self.history.append(dt)
         straggler = False
         if self._count > self.warmup:  # skip compile steps
             if self.ewma is None:
-                self.ewma = dt
-            else:
-                straggler = dt > self.threshold * self.ewma
-                self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
+                # seed from the warmup history (median — robust to the
+                # compile-step outlier), not from this measurement: an
+                # EWMA seeded from the step it judges can never flag it
+                prior = list(self.history)[:-1]
+                self.ewma = float(np.median(prior)) if prior else dt
+            straggler = dt > self.threshold * self.ewma
+            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
         return {"step_time": dt, "ewma": self.ewma,
                 "straggler": straggler}
 

@@ -3,6 +3,15 @@ paged KV cache.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
         --smoke --requests 12 --max-new 16
+
+Crash-safe mode (DESIGN.md §12): with ``--snapshot-dir`` a
+``PreemptionGuard`` arms SIGTERM/SIGINT — the loop finishes the
+in-flight tick, snapshots the complete serving state (arena + KV pages
++ queue) and exits with code 3; a restart with ``--resume`` picks the
+stream back up token-identically.  Each completed request prints a
+stable ``REQ <uid> <tokens...>`` line, so killed-run + resumed-run
+output concatenates to exactly the uninterrupted run's output (the CI
+crash-restart smoke asserts this).
 """
 from __future__ import annotations
 
@@ -44,7 +53,20 @@ def main(argv=None):
                     help="fire a proactive defrag wave when frag_ratio "
                          "exceeds RATIO (0-1; default: only the "
                          "allocation-failure retry defrags)")
+    ap.add_argument("--snapshot-dir", default=None, metavar="DIR",
+                    help="arm crash-safe serving: SIGTERM/SIGINT "
+                         "finishes the current tick, snapshots the "
+                         "complete serving state into DIR "
+                         "(ckpt/checkpoint.py atomic layout) and "
+                         "exits with code 3")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the newest committed snapshot under "
+                         "--snapshot-dir and resume mid-stream "
+                         "(token-identically) instead of submitting "
+                         "fresh requests")
     args = ap.parse_args(argv)
+    if args.resume and not args.snapshot_dir:
+        ap.error("--resume requires --snapshot-dir")
 
     import jax
     import numpy as np
@@ -68,19 +90,50 @@ def main(argv=None):
     if args.mega:
         eng.launches_per_tick()  # record into stats before serving
 
-    rng = np.random.default_rng(args.seed)
-    for _ in range(args.requests):
-        plen = int(rng.integers(4, args.max_seq // 4))
-        eng.submit(rng.integers(2, cfg.vocab_size, plen),
-                   max_new_tokens=args.max_new)
+    guard = None
+    if args.snapshot_dir:
+        from repro.ft.runtime import PreemptionGuard
+        guard = PreemptionGuard()
+
+    if args.resume:
+        step = eng.restore(args.snapshot_dir)
+        print(f"resumed from snapshot step {step} "
+              f"under {args.snapshot_dir}", flush=True)
+    else:
+        rng = np.random.default_rng(args.seed)
+        for _ in range(args.requests):
+            plen = int(rng.integers(4, args.max_seq // 4))
+            eng.submit(rng.integers(2, cfg.vocab_size, plen),
+                       max_new_tokens=args.max_new)
+
     t0 = time.time()
-    done = eng.run_until_done()
+    done, preempted = [], False
+    for _ in range(100000):
+        finished = eng.step()
+        for r in finished:
+            # one stable line per completed stream: killed-run output +
+            # resumed-run output must concatenate to the uninterrupted
+            # run's output (the crash-restart smoke diffs these)
+            print("REQ", r.uid, *r.out_tokens, flush=True)
+        done.extend(finished)
+        drained = (not eng.waiting
+                   and all(s is None for s in eng.slot_req))
+        if drained:
+            break
+        if guard is not None and guard.should_stop:
+            path = eng.snapshot(directory=args.snapshot_dir)
+            print(f"preempted: snapshot committed to {path}",
+                  flush=True)
+            preempted = True
+            break
     dt = time.time() - t0
     toks = sum(len(r.out_tokens) for r in done)
     print(f"served {len(done)} requests, {toks} tokens in {dt:.1f}s "
-          f"({toks / dt:.1f} tok/s incl. compile)")
+          f"({toks / max(dt, 1e-9):.1f} tok/s incl. compile)")
     print(f"allocator stats: {eng.stats}")
-    return 0 if len(done) == args.requests else 1
+    if preempted:
+        return 3
+    return 0 if drained else 1
 
 
 if __name__ == "__main__":

@@ -123,7 +123,10 @@ def make_kv_allocator(num_pages: int, backend: str = "jnp",
     included; ``lowering`` picks the kernel shape (whole-arena refs vs
     the region-blocked compiled lowering, DESIGN.md §8).  Backends and
     lowerings are bit-identical, so serving behaviour is invariant to
-    both.
+    both — which is also why the serving snapshot fingerprint
+    (DESIGN.md §12) records this allocator's layout/geometry but NOT
+    its backend/lowering: a snapshot taken on one restores onto the
+    other mid-stream.
 
     ``num_shards > 1`` partitions the page space into that many
     independent arenas (core/shards.py, DESIGN.md §9): the heap is

@@ -38,6 +38,7 @@ multi-pod path); everything device-side is jitted.
 from __future__ import annotations
 
 import dataclasses
+import json
 from typing import Dict, List, NamedTuple, Optional
 
 import jax
@@ -56,6 +57,28 @@ class Request:
     eos_id: Optional[int] = None
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+
+
+SNAPSHOT_VERSION = 1
+
+
+def _req_to_json(r: Request) -> dict:
+    return {"uid": int(r.uid),
+            "prompt": [int(t) for t in np.asarray(r.prompt)],
+            "max_new_tokens": int(r.max_new_tokens),
+            "eos_id": None if r.eos_id is None else int(r.eos_id),
+            "out_tokens": [int(t) for t in r.out_tokens],
+            "done": bool(r.done)}
+
+
+def _req_from_json(d: dict) -> Request:
+    return Request(
+        uid=int(d["uid"]),
+        prompt=np.asarray(d["prompt"], np.int32),
+        max_new_tokens=int(d["max_new_tokens"]),
+        eos_id=None if d["eos_id"] is None else int(d["eos_id"]),
+        out_tokens=[int(t) for t in d["out_tokens"]],
+        done=bool(d["done"]))
 
 
 class MegaState(NamedTuple):
@@ -217,6 +240,10 @@ class ServingEngine:
         self.slot_len = np.zeros(max_batch, np.int64)  # host truth
         self.waiting: List[Request] = []
         self._uid = 0
+        # admission ordinals: which active slot is YOUNGEST (the
+        # eviction victim under exhaustion — it loses the least work)
+        self._admit_ord = np.zeros(max_batch, np.int64)
+        self._admit_counter = 0
         # both entry points argmax ON DEVICE: only (B,) int32 token ids
         # ever cross the host boundary, never (B, vocab) logits.
         self._prefill = jax.jit(
@@ -268,6 +295,10 @@ class ServingEngine:
                       # defragmentation observability (DESIGN.md §10):
                       # transactions issued, waves run, pages moved
                       "alloc_txns": 0,
+                      # graceful degradation (DESIGN.md §12): slots
+                      # evicted + requeued when defrag could not
+                      # reclaim enough pages
+                      "evictions": 0,
                       "defrag_waves": 0,
                       "rebalance_waves": 0,
                       "auto_defrag_waves": 0,
@@ -558,6 +589,8 @@ class ServingEngine:
             req.out_tokens.append(first)
             self.slot_req[slot] = req
             self.slot_len[slot] = lp + 1
+            self._admit_counter += 1
+            self._admit_ord[slot] = self._admit_counter
             if self.mega_step:
                 self._mega_admit(slot, req, first)
 
@@ -731,21 +764,25 @@ class ServingEngine:
             self.stats["allocs"] += grants
 
         if fail.any():
-            self._recover_failed(fail, l_offs, l_slot, l_mask)
+            self._recover_failed(fail, fin, l_offs, l_slot, l_mask)
         else:
             self._fail_streak[:] = 0
 
         finished = []
         for s in np.nonzero(fin)[0]:
-            finished.append(self._release_mega(int(s)))
+            if self.slot_req[s] is not None:  # not evicted this tick
+                finished.append(self._release_mega(int(s)))
         return finished
 
-    def _recover_failed(self, fail, l_offs, l_slot, l_mask):
+    def _recover_failed(self, fail, fin, l_offs, l_slot, l_mask):
         """Alloc-failure path (host-side, as in the host loop): pull
         the lane arrays (failure ticks only), return the failed slots'
         partial grants to the heap, run ONE defrag wave, and let the
-        next tick retry — two consecutive failed retries mean the heap
-        is genuinely exhausted."""
+        next tick retry.  Two consecutive failed retries mean defrag
+        cannot reclaim enough — gracefully degrade by evicting the
+        youngest active slot (its pages return to the heap, its
+        request requeues and replays identically under greedy decode)
+        instead of killing the server with ``MemoryError``."""
         offs_h = np.asarray(l_offs)
         slot_h = np.asarray(l_slot)
         mask_h = np.asarray(l_mask)
@@ -755,7 +792,14 @@ class ServingEngine:
         self._fail_streak[fail] += 1
         self._fail_streak[~fail] = 0
         if (self._fail_streak >= 2).any():
-            raise MemoryError("KV heap exhausted mid-flight")
+            # slots finishing THIS tick retire (and free) right after
+            # this call — evicting one would double-release it, and
+            # its pages come back anyway
+            victim = self._youngest_active(
+                exclude=set(int(s) for s in np.nonzero(fin)[0]))
+            if victim is not None:
+                self._evict_slot(victim)
+                self._fail_streak[:] = 0
 
     def _free_offsets(self, offs_words):
         """Uncounted bulk free of raw word offsets (failure recovery:
@@ -794,31 +838,98 @@ class ServingEngine:
             n_out=ms.n_out.at[slot].set(0))
         self.slot_req[slot] = None
         self.slot_len[slot] = 0
+        self._admit_ord[slot] = 0
         self._pages_host[slot] = 0
         self._nout_host[slot] = 0
         self._fail_streak[slot] = 0
         return req
 
+    # ---- graceful degradation: evict + requeue under exhaustion ------------
+
+    def _youngest_active(self, exclude=()) -> Optional[int]:
+        """The eviction victim: the most recently admitted active slot
+        (it loses the least generated work, and greedy decode replays
+        its stream identically after re-admission)."""
+        slots = [s for s in range(self.max_batch)
+                 if self.slot_req[s] is not None and s not in exclude]
+        if not slots:
+            return None
+        return max(slots, key=lambda s: int(self._admit_ord[s]))
+
+    def _evict_slot(self, slot: int):
+        """Evict one active slot: free every page it holds back
+        through the allocator, zero its slot state (host and device),
+        and push its request to the FRONT of the waiting queue with
+        its generated tokens discarded — re-admission replays the
+        identical stream (greedy decode is deterministic), so one
+        oversized burst degrades throughput instead of killing the
+        server.  Counted in ``stats["evictions"]``."""
+        req = self.slot_req[slot]
+        kv = self._kv()
+        if self.mega_step:
+            # mid-flight the device page-table row is the only page-id
+            # holder (slot_pages was cleared at _mega_admit)
+            if kv is not None:
+                row = np.asarray(kv.page_table[slot])
+                self._bulk_free([int(p) for p in row[row >= 0]])
+            ms = self.mega_state
+            self.mega_state = MegaState(
+                last_tok=ms.last_tok.at[slot].set(0),
+                lens=ms.lens.at[slot].set(0),
+                page_counts=ms.page_counts.at[slot].set(0),
+                active=ms.active.at[slot].set(False),
+                budget=ms.budget.at[slot].set(0),
+                eos=ms.eos.at[slot].set(-1),
+                out_buf=ms.out_buf,
+                n_out=ms.n_out.at[slot].set(0))
+            self._pages_host[slot] = 0
+            self._nout_host[slot] = 0
+            self._fail_streak[slot] = 0
+        else:
+            self._bulk_free(self.slot_pages[slot])
+            self.slot_pages[slot] = []
+        kv = self._kv()
+        if kv is not None:
+            self._set_kv(kv._replace(
+                page_table=kv.page_table.at[slot].set(-1),
+                seq_lens=kv.seq_lens.at[slot].set(0)))
+        req.out_tokens = []
+        req.done = False
+        self.waiting.insert(0, req)
+        self.slot_req[slot] = None
+        self.slot_len[slot] = 0
+        self._admit_ord[slot] = 0
+        self.stats["evictions"] += 1
+
     # ---- main loop -----------------------------------------------------------
-    def _grow_active(self, active: List[int]):
+    def _grow_active(self, active: List[int]) -> List[int]:
         """Decode-step page growth for ALL active slots as ONE bulk
         alloc transaction (previously ``_map_pages`` ran per slot — up
-        to ``max_batch`` kernel launches per decode step).  Raises
-        ``MemoryError`` only after a defragmentation wave failed to
-        reclaim enough pages."""
+        to ``max_batch`` kernel launches per decode step).  When a
+        defragmentation wave fails to reclaim enough pages, evicts the
+        youngest slot (freeing its pages, requeueing its request) and
+        retries — never raises.  Returns the slots still active."""
         if self._kv() is None:  # attention-free family: O(1) state
-            return
-        slots = []
-        for s in active:
-            need = -(-(int(self.slot_len[s]) + 1) // self.page)
-            slots.extend([s] * (need - len(self.slot_pages[s])))
-        if not slots:
-            return
-        got = self._alloc_pages([s % self.num_shards for s in slots])
-        if any(g < 0 for g in got):
+            return list(active)
+        active = list(active)
+        while True:
+            slots = []
+            for s in active:
+                need = -(-(int(self.slot_len[s]) + 1) // self.page)
+                slots.extend([s] * (need - len(self.slot_pages[s])))
+            if not slots:
+                return active
+            got = self._alloc_pages([s % self.num_shards for s in slots])
+            if all(g >= 0 for g in got):
+                self._map_granted(slots, got)
+                return active
             self._bulk_free([g for g in got if g >= 0])
-            raise MemoryError("KV heap exhausted mid-flight")
-        self._map_granted(slots, got)
+            victim = self._youngest_active()
+            if victim is None:
+                return active
+            self._evict_slot(victim)
+            if victim in active:
+                active.remove(victim)
 
     def _step_host(self) -> List[Request]:
         """Host-loop decode tick: grow pages (host computes need),
@@ -828,7 +939,10 @@ class ServingEngine:
                   if self.slot_req[s] is not None]
         finished = []
         if active:
-            self._grow_active(active)
+            # growth may evict slots (exhaustion degradation) — decode
+            # only the survivors
+            active = self._grow_active(active)
+        if active:
             toks = np.zeros((self.max_batch, 1), np.int32)
             for s in active:
                 toks[s, 0] = self.slot_req[s].out_tokens[-1]
@@ -870,6 +984,7 @@ class ServingEngine:
             self._set_kv(kv._replace(page_table=pt, seq_lens=sl))
         self.slot_req[slot] = None
         self.slot_len[slot] = 0
+        self._admit_ord[slot] = 0
 
     def run_until_done(self, max_steps: int = 10000) -> List[Request]:
         out = []
@@ -878,6 +993,184 @@ class ServingEngine:
             if not self.waiting and all(r is None for r in self.slot_req):
                 break
         return out
+
+    # ---- crash-safe serving: snapshot / restore (DESIGN.md §12) ------------
+
+    def snapshot_fingerprint(self) -> dict:
+        """The layout-validation contract (DESIGN.md §12): everything
+        that decides how snapshot words are INTERPRETED — the arena
+        layout rendering (the same ``describe()`` the golden-layout
+        tests pin), allocator geometry, and engine geometry.  A
+        snapshot restores only into an engine whose fingerprint
+        matches exactly; allocator ``backend``/``lowering`` are
+        deliberately absent (transactions are bit-identical across
+        them, so a snapshot may restore onto a different one)."""
+        kv = self._kv()
+        lay = self.ouro.layout
+        return {
+            "snapshot_version": SNAPSHOT_VERSION,
+            "arena_layout": lay.describe(),
+            "variant": self.ouro.variant,
+            "num_shards": self.num_shards,
+            "wpp": self.wpp,
+            "page_bytes": self.page_bytes,
+            "page_tokens": self.page,
+            "num_pages": self.num_pages,
+            "arch": self.cfg.name,
+            "max_batch": self.max_batch,
+            "max_seq": self.max_seq,
+            "mega_step": self.mega_step,
+            "max_new_cap": (self.max_new_cap if self.mega_step
+                            else None),
+            "kv_dtype": (None if kv is None
+                         else str(kv.layers.k.dtype)),
+        }
+
+    def _snapshot_tree(self):
+        """The array half of a snapshot (also the restore template):
+        arena slabs, KV caches, and — in mega-step mode — the device
+        carry plus its host mirrors."""
+        tree = {"arena_mem": self.alloc_state.mem,
+                "arena_ctl": self.alloc_state.ctl,
+                "caches": self.caches,
+                "slot_len": np.asarray(self.slot_len)}
+        if self.mega_step:
+            tree["mega"] = self.mega_state
+            tree["pages_host"] = np.asarray(self._pages_host)
+            tree["nout_host"] = np.asarray(self._nout_host)
+            tree["fail_streak"] = np.asarray(self._fail_streak)
+        return tree
+
+    def _snapshot_meta(self) -> dict:
+        """The JSON half: fingerprint, request queue, host tables,
+        stats counters (everything non-array a restart needs)."""
+        meta = {
+            "fingerprint": self.snapshot_fingerprint(),
+            "uid": self._uid,
+            "admit_counter": self._admit_counter,
+            "admit_ord": [int(x) for x in self._admit_ord],
+            "slot_reqs": [None if r is None else _req_to_json(r)
+                          for r in self.slot_req],
+            "waiting": [_req_to_json(r) for r in self.waiting],
+            "slot_pages": [[int(p) for p in ps]
+                           for ps in self.slot_pages],
+            "shard_pages": [int(x) for x in self._shard_pages],
+            "stats": {k: v for k, v in self.stats.items()},
+        }
+        # round-trip now: catches an unserializable field at snapshot
+        # time (not at some later restore) and deep-copies
+        return json.loads(json.dumps(meta))
+
+    def snapshot(self, directory: Optional[str] = None,
+                 step: Optional[int] = None, keep: int = 3):
+        """Capture the COMPLETE serving state at a step boundary:
+        arena word image + control block (all shards), KV page heaps +
+        page tables + ``seq_lens``, the mega-step carry and its host
+        mirrors, the waiting queue and in-flight requests, and the
+        stats block.  With ``directory``, writes an atomic committed
+        checkpoint through ckpt/checkpoint.py (requests and the layout
+        fingerprint ride the ``meta.json`` sidecar) and returns the
+        committed path; otherwise returns the in-memory snapshot dict
+        ``{"tree", "meta"}`` that :meth:`restore` accepts directly."""
+        meta = self._snapshot_meta()
+        if directory is not None:
+            from repro.ckpt import checkpoint as CK
+            return CK.save(self._snapshot_tree(), directory,
+                           step=self.stats["steps"] if step is None
+                           else step,
+                           keep=keep, extra=meta)
+        tree = jax.tree.map(lambda x: np.array(jax.device_get(x)),
+                            self._snapshot_tree())
+        return {"tree": tree, "meta": meta}
+
+    def restore(self, source, step: Optional[int] = None):
+        """Load a snapshot taken by :meth:`snapshot` — an in-memory
+        snapshot dict, or a checkpoint directory (newest committed
+        step unless ``step`` is given; a step swept by a concurrent
+        retention falls back to the next-newest).  The snapshot's
+        layout fingerprint is validated FIRST: a snapshot from a
+        different ``ArenaLayout`` or engine geometry is rejected
+        loudly with a ``ValueError`` naming the differing fields —
+        never silently misinterpreted.  After restore, decoding
+        resumes token-identically for every in-flight sequence.
+        Returns the restored checkpoint step (None for in-memory
+        snapshots)."""
+        if isinstance(source, str):
+            from repro.ckpt import checkpoint as CK
+            meta_rec, s = CK.read_meta(source, step)
+            meta = meta_rec.get("extra")
+            if meta is None or "fingerprint" not in meta:
+                raise ValueError(
+                    f"checkpoint step {s} under {source!r} is not a "
+                    f"serving-engine snapshot (no fingerprint sidecar)")
+            self._validate_fingerprint(meta["fingerprint"])
+            tree, s = CK.restore(self._snapshot_tree(), source, step=s)
+            self._apply_snapshot(tree, meta)
+            return s
+        meta = source["meta"]
+        self._validate_fingerprint(meta["fingerprint"])
+        self._apply_snapshot(source["tree"], meta)
+        return None
+
+    def _validate_fingerprint(self, fp: dict):
+        mine = self.snapshot_fingerprint()
+        if fp != mine:
+            diffs = sorted(k for k in set(fp) | set(mine)
+                           if fp.get(k) != mine.get(k))
+            raise ValueError(
+                f"snapshot layout fingerprint mismatch on fields "
+                f"{diffs} — refusing to restore: a snapshot from a "
+                f"different ArenaLayout or engine geometry would be "
+                f"silently misinterpreted (snapshot "
+                f"{ {k: fp.get(k) for k in diffs} !r} vs engine "
+                f"{ {k: mine.get(k) for k in diffs} !r})")
+
+    def _apply_snapshot(self, tree, meta):
+        """Install validated snapshot state (fingerprint already
+        checked; every array leaf is additionally shape/dtype-checked
+        against the live engine before anything is mutated)."""
+        def check(path, new, old):
+            new = jnp.asarray(np.asarray(new))
+            old = jnp.asarray(old)
+            if new.shape != old.shape or new.dtype != old.dtype:
+                raise ValueError(
+                    f"snapshot leaf {jax.tree_util.keystr(path)}: "
+                    f"shape/dtype {new.shape}/{new.dtype} does not "
+                    f"match the engine's {old.shape}/{old.dtype}")
+            return new
+
+        mapped = jax.tree_util.tree_map_with_path(
+            check, tree, self._snapshot_tree())
+        self.alloc_state = self.alloc_state._replace(
+            mem=mapped["arena_mem"], ctl=mapped["arena_ctl"])
+        self.caches = mapped["caches"]
+        self.slot_len = np.asarray(mapped["slot_len"], np.int64).copy()
+        if self.mega_step:
+            self.mega_state = mapped["mega"]
+            self._pages_host = np.asarray(mapped["pages_host"],
+                                          np.int64).copy()
+            self._nout_host = np.asarray(mapped["nout_host"],
+                                         np.int64).copy()
+            self._fail_streak = np.asarray(mapped["fail_streak"],
+                                           np.int64).copy()
+        self.slot_req = [None if d is None else _req_from_json(d)
+                         for d in meta["slot_reqs"]]
+        self.waiting = [_req_from_json(d) for d in meta["waiting"]]
+        self.slot_pages = [[int(p) for p in ps]
+                           for ps in meta["slot_pages"]]
+        self._uid = int(meta["uid"])
+        self._admit_counter = int(meta["admit_counter"])
+        self._admit_ord = np.asarray(meta["admit_ord"], np.int64)
+        self._shard_pages = np.asarray(meta["shard_pages"], np.int64)
+        # counters restore; engine-identity fields (which backend /
+        # lowering / launch count THIS process runs) stay fresh
+        identity = {"arena_mem_words", "arena_ctl_words",
+                    "alloc_backend", "alloc_lowering", "num_shards",
+                    "mega_step", "launches_per_tick"}
+        for k, v in meta["stats"].items():
+            if k in self.stats and k not in identity:
+                self.stats[k] = v
+        self.refresh_frag_stats()
 
 
 def _tokens_of(model_out):

@@ -37,6 +37,13 @@ def pytest_configure(config):
         "serve: exercises the serving engine's fused decode mega-step "
         "(serve/engine.py, DESIGN.md §11; the forced-blocked CI job "
         "runs the mega-vs-host parity suite under this marker)")
+    config.addinivalue_line(
+        "markers",
+        "ft: exercises crash-safe serving — engine snapshot/restore, "
+        "layout-fingerprint validation, and exhaustion eviction "
+        "(DESIGN.md §12; the forced-blocked CI job runs this marker, "
+        "and the nightly job adds a kill-and-resume smoke on "
+        "launch/serve.py)")
 
 
 def pytest_collection_modifyitems(config, items):

@@ -94,6 +94,107 @@ def test_restore_resume_training(tmp_path):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+def test_colliding_leaf_paths_roundtrip(tmp_path):
+    """Regression: sanitization (``[^A-Za-z0-9_.|-] → _``) is lossy,
+    so distinct leaf paths like ``a/b`` and ``a?b`` map to the same
+    filename — the later leaf used to silently overwrite the earlier
+    one and restore returned the wrong tensor for BOTH keys."""
+    state = {"a/b": jnp.arange(4), "a?b": jnp.arange(4) + 100,
+             "a_b": jnp.arange(4) + 200}
+    CK.save(state, str(tmp_path), step=1)
+    restored, _ = CK.restore(state, str(tmp_path))
+    np.testing.assert_array_equal(np.asarray(restored["a/b"]),
+                                  np.arange(4))
+    np.testing.assert_array_equal(np.asarray(restored["a?b"]),
+                                  np.arange(4) + 100)
+    np.testing.assert_array_equal(np.asarray(restored["a_b"]),
+                                  np.arange(4) + 200)
+    # the key→file map in meta.json is exact and collision-free
+    meta, _ = CK.read_meta(str(tmp_path))
+    files = [v["file"] for v in meta["leaves"].values()]
+    assert len(files) == len(set(files)) == 3
+
+
+def test_restore_falls_back_when_step_vanishes(tmp_path):
+    """Regression for the restore/retention race: the newest committed
+    step can be deleted between the directory listing and the read
+    (daemon-thread keep-k sweep) — restore must fall back to the
+    next-newest committed step instead of crashing."""
+    state = {"w": jnp.arange(8)}
+    CK.save(state, str(tmp_path), step=1)
+    CK.save(state, str(tmp_path), step=2)
+    # simulate the race: step_2 committed (listed) but swept before
+    # its meta.json is opened
+    import shutil
+    shutil.rmtree(tmp_path / "step_00000002")
+    restored, step = CK.restore(state, str(tmp_path))
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.arange(8))
+    # an EXPLICIT step request still fails loudly
+    with pytest.raises(FileNotFoundError):
+        CK.restore(state, str(tmp_path), step=2)
+
+
+def test_retention_never_deletes_newest(tmp_path):
+    """Even ``keep=0`` must keep the newest committed checkpoint — a
+    directory whose every step can vanish would turn the fallback
+    above into 'no checkpoints at all'."""
+    state = {"w": jnp.arange(2)}
+    for s in (1, 2, 3):
+        CK.save(state, str(tmp_path), step=s, keep=0)
+    assert CK.committed_steps(str(tmp_path)) == [3]
+
+
+def test_bfloat16_roundtrips_bit_exact(tmp_path):
+    """Extension dtypes come back from np.load as void records; the
+    recorded-dtype reinterpretation in restore must hand back the
+    exact bf16 bits (the serving KV heap defaults to bf16)."""
+    x = jnp.asarray(np.linspace(-3, 3, 64, dtype=np.float32),
+                    jnp.bfloat16)
+    CK.save({"kv": x}, str(tmp_path), step=1)
+    restored, _ = CK.restore({"kv": x}, str(tmp_path))
+    assert restored["kv"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(restored["kv"]).view(np.uint16),
+        np.asarray(x).view(np.uint16))
+
+
+def test_async_extra_sidecar_roundtrips(tmp_path):
+    """``extra=`` rides meta.json through the async writer — the
+    serving engine keeps its request queue + layout fingerprint
+    there."""
+    ck = CK.AsyncCheckpointer(str(tmp_path), keep=2)
+    ck.save({"w": jnp.arange(3)}, 1, extra={"queue": [1, 2], "k": "v"})
+    ck.wait()
+    meta, step = CK.read_meta(str(tmp_path))
+    assert step == 1
+    assert meta["extra"] == {"queue": [1, 2], "k": "v"}
+
+
+def test_step_monitor_stop_without_start():
+    """Regression: ``stop()`` with no matching ``start()`` used to
+    crash with a bare TypeError from ``None`` arithmetic."""
+    mon = StepMonitor()
+    with pytest.raises(RuntimeError, match="without a matching"):
+        mon.stop()
+
+
+def test_step_monitor_first_post_warmup_step_flaggable():
+    """Regression: the EWMA used to be seeded from the first
+    post-warmup measurement itself, so that step could never be
+    flagged.  Seeded from the warmup history, a 10× outlier right
+    after warmup IS a straggler."""
+    mon = StepMonitor(alpha=0.5, threshold=1.5, warmup=2)
+    for dt in (0.1, 0.1):  # warmup steps
+        mon.start()
+        mon._t0 -= dt
+        assert not mon.stop()["straggler"]
+    mon.start()
+    mon._t0 -= 1.0  # first judged step: 10× the warmup median
+    assert mon.stop()["straggler"]
+
+
 def test_step_monitor_flags_stragglers():
     mon = StepMonitor(alpha=0.5, threshold=1.5, warmup=0)
     for dt in (0.1, 0.1, 0.1):

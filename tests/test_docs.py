@@ -136,3 +136,21 @@ def test_design_s11_mega_step_documented():
                    "merge_rows", "BENCH_serve.json",
                    "count_pallas_calls", "wpp"):
         assert needle in sec, f"DESIGN.md §11 lost {needle!r}"
+
+
+# ---- DESIGN.md §12: crash-safe serving ------------------------------------
+
+def test_design_s12_crash_safe_serving_documented():
+    """The §12 contract keywords tests/test_serve_snapshot.py and the
+    CI crash-restart smoke rely on stay documented: what is
+    snapshotted (array tree vs JSON sidecar), the fingerprint
+    validation contract and its golden pin, the recompute-vs-reload
+    split, the serve-driver wiring, and eviction degradation."""
+    sec = DOC.read_text().split("## §12")[1].split("\n## §")[0]
+    for needle in ("snapshot()", "restore()", "snapshot_fingerprint",
+                   "describe()", "meta.json", "extra",
+                   "serve_snapshot_fingerprint.txt", "donate_argnums",
+                   "PreemptionGuard", "--snapshot-dir", "--resume",
+                   "REQ <uid>", "evictions", "youngest",
+                   "refresh_frag_stats", "exit"):
+        assert needle in sec, f"DESIGN.md §12 lost {needle!r}"
