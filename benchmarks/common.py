@@ -12,6 +12,8 @@ same apples-to-apples split the paper added.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import numpy as np
@@ -187,6 +189,112 @@ def alloc_comparison_cell(variant: str, *, quick: bool = False,
             "data_ok": r["data_ok"],
         }
     return out
+
+
+# ---------------------------------------------------------------------------
+# BENCH_serve.json trajectory schema (DESIGN.md §13)
+#
+# The file is append-only: {"runs": [record, ...]}, one record per
+# benchmark invocation.  Two record kinds share the envelope —
+# ``serve`` (fig8: host/mega tokens-per-second cells) and ``replay``
+# (fig9: per-scenario traffic-replay telemetry cells).  Records written
+# before the ``record`` key existed are ``serve`` records; the
+# validator grandfathers them in rather than rewriting history.
+# ---------------------------------------------------------------------------
+
+SERVE_RECORD_KINDS = ("serve", "replay")
+SERVE_RECORD_KEYS = ("platform", "git_sha", "record", "cells")
+REPLAY_CELL_KEYS = (
+    "scenario", "arch", "mode", "requests", "completed", "cancelled",
+    "steps", "tokens", "tick_ms_p50", "tick_ms_p99", "queue_wait_p50",
+    "queue_wait_p99", "evictions", "defrag_waves", "auto_defrag_waves",
+    "pages_migrated", "aux_pages_per_slot", "allocs", "frees",
+    "frag_ratio_final",
+)
+
+
+def validate_serve_record(record) -> str:
+    """Schema-check one BENCH_serve.json run record; returns its kind.
+
+    Required envelope keys: ``platform``, ``git_sha``, a non-empty
+    ``cells`` dict, and a ``record`` kind from
+    :data:`SERVE_RECORD_KINDS` — absent kind means a legacy fig8
+    record and validates as ``"serve"``.  ``replay`` cells must carry
+    every telemetry key in :data:`REPLAY_CELL_KEYS` (the p50/p99 +
+    fragmentation trajectory future PRs diff against).  Raises
+    ``ValueError`` with the offending key on any violation."""
+    if not isinstance(record, dict):
+        raise ValueError(f"serve record must be a dict, got "
+                         f"{type(record).__name__}")
+    kind = record.get("record", "serve")
+    if kind not in SERVE_RECORD_KINDS:
+        raise ValueError(f"unknown serve record kind {kind!r}; expected "
+                         f"one of {SERVE_RECORD_KINDS}")
+    for key in SERVE_RECORD_KEYS:
+        if key == "record":
+            continue                      # legacy records predate it
+        if key not in record:
+            raise ValueError(f"serve record missing required key "
+                             f"{key!r} (kind={kind})")
+    cells = record["cells"]
+    if not isinstance(cells, dict) or not cells:
+        raise ValueError(f"serve record 'cells' must be a non-empty "
+                         f"dict, got {cells!r}")
+    if kind == "replay":
+        for name, cell in cells.items():
+            missing = [k for k in REPLAY_CELL_KEYS if k not in cell]
+            if missing:
+                raise ValueError(f"replay cell {name!r} missing "
+                                 f"telemetry keys {missing}")
+    return kind
+
+
+def load_runs(path: str) -> list:
+    """Existing run records of an append-only trajectory file; a
+    pre-append-format file (one flat jnp-vs-pallas report with
+    ``_meta``) becomes run #1.  An unparseable file raises instead of
+    being overwritten — the whole point of the append format is never
+    to lose the trajectory."""
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        try:
+            data = json.load(f)
+        except ValueError as e:
+            raise SystemExit(
+                f"{path} exists but is not valid JSON ({e}); refusing "
+                f"to overwrite the perf trajectory — fix or move the "
+                f"file and rerun") from e
+    if isinstance(data, dict) and isinstance(data.get("runs"), list):
+        return data["runs"]
+    if isinstance(data, dict) and "runs" in data:
+        # new-format marker with a mangled value: never "migrate" it.
+        raise SystemExit(
+            f"{path} has a 'runs' key that is not a list; refusing to "
+            f"rewrite a damaged trajectory file")
+    if isinstance(data, dict) and data:
+        meta = data.pop("_meta", {})
+        return [{"platform": meta.get("platform", "unknown"),
+                 "git_sha": "pre-append-format",
+                 "quick": meta.get("quick"),
+                 "variants": data}]
+    raise SystemExit(
+        f"{path} holds unrecognized JSON (neither a runs list nor a "
+        f"legacy report); refusing to overwrite it")
+
+
+def append_serve_record(path: str, record: dict) -> int:
+    """Validate ``record`` and append it to the BENCH_serve.json
+    trajectory at ``path`` (atomic replace — a failure mid-dump must
+    not truncate the file).  Returns the new run count."""
+    validate_serve_record(record)
+    runs = load_runs(path)
+    runs.append(record)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump({"runs": runs}, f, indent=2, sort_keys=True)
+    os.replace(tmp, path)
+    return len(runs)
 
 
 SHARD_SWEEP = (1, 2, 4)

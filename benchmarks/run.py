@@ -32,6 +32,16 @@ paths plus the launches-per-tick proof, accumulating in
 ``fig8_serve`` is not in the default figure list (it builds a model);
 run it with ``--fig fig8_serve`` or via ``--serve-json``.
 
+``--fig fig9_replay`` runs the traffic-replay figure (benchmarks/
+fig9_replay.py): deterministic Poisson/bursty/abandonment traces
+through the serving engine for one config per model family, host and
+mega decode modes parity-checked per pair; with ``--serve-json`` the
+per-scenario p50/p99 + fragmentation cells append as a ``replay``
+record (the ``serve``-kind fig8 record only appends when fig8 actually
+ran, i.e. with no ``--fig`` filter or with ``--fig fig8_serve``).
+Record schemas are validated on append (benchmarks/common.py,
+``validate_serve_record``).
+
     PYTHONPATH=src python -m benchmarks.run [--quick] [--fig fig1_page]
         [--backend jnp|pallas|both] [--lowering auto|whole|blocked]
         [--num-shards N] [--alloc-json BENCH_alloc.json]
@@ -43,7 +53,17 @@ import argparse
 import importlib
 import json
 import os
+import pathlib
 import subprocess
+import sys
+
+# make `python benchmarks/run.py` equivalent to
+# `PYTHONPATH=src python -m benchmarks.run` — script invocation puts
+# benchmarks/ (not the repo root) on sys.path.
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+for _p in (str(_ROOT), str(_ROOT / "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
 FIGS = ["fig1_page", "fig2_chunk", "fig3_va_page", "fig4_vl_page",
         "fig5_va_chunk", "fig6_vl_chunk", "fig7_frag"]
@@ -89,6 +109,19 @@ def main(argv=None) -> None:
                 name = (f"{fig}/{row['variant']}/{row['backend']}"
                         f"/{row['lowering']}/sh{row['num_shards']}"
                         f"/n{row['n']}/s{row['size']}")
+                if "tick_ms_p99" in row:  # replay rows (fig9_replay)
+                    derived = (
+                        f"p50_ms={row['tick_ms_p50']:.2f} "
+                        f"p99_ms={row['tick_ms_p99']:.2f} "
+                        f"wait_p50={row['queue_wait_p50']:.0f} "
+                        f"wait_p99={row['queue_wait_p99']:.0f} "
+                        f"done={row['completed']}/{row['requests']} "
+                        f"cancelled={row['cancelled']} "
+                        f"evictions={row['evictions']} "
+                        f"frag={row['frag_ratio_final']:.3f}")
+                    print(f"{name},{row['tick_ms_p99']:.2f},{derived}",
+                          flush=True)
+                    continue
                 if "tokens_per_s" in row:  # serving rows (fig8_serve)
                     derived = (
                         f"tok_per_s_all={row['tokens_per_s_all']:.1f} "
@@ -181,7 +214,8 @@ def main(argv=None) -> None:
                                                   lowering=args.lowering)
                          for v in VARIANTS},
         }
-        runs = _load_runs(args.alloc_json)
+        from benchmarks.common import load_runs
+        runs = load_runs(args.alloc_json)
         runs.append(record)
         # atomic replace: a failure mid-dump must not truncate the
         # trajectory file the append format exists to preserve.
@@ -193,26 +227,40 @@ def main(argv=None) -> None:
 
     if args.serve_json:
         import jax
-        from benchmarks import fig8_serve
+        from benchmarks.common import append_serve_record
 
-        cells = fig8_serve.serve_record(quick=args.quick)
-        for name, c in cells.items():
-            print(f"serve,{name},tok_per_s_sub={c['tokens_per_s']:.1f} "
-                  f"launches_per_tick={c['launches_per_tick']}",
+        # which record kinds this invocation actually measured: fig8's
+        # serve record unless a --fig filter excluded it, fig9's replay
+        # record only when explicitly requested (it builds a model per
+        # family).
+        envelope = lambda: {"platform": jax.default_backend(),
+                            "git_sha": _git_sha(),
+                            "quick": bool(args.quick)}
+        if args.fig is None or "fig8_serve" in figs:
+            from benchmarks import fig8_serve
+
+            cells = fig8_serve.serve_record(quick=args.quick)
+            for name, c in cells.items():
+                print(f"serve,{name},"
+                      f"tok_per_s_sub={c['tokens_per_s']:.1f} "
+                      f"launches_per_tick={c['launches_per_tick']}",
+                      flush=True)
+            n = append_serve_record(args.serve_json, dict(
+                envelope(), record="serve", cells=cells))
+            print(f"appended serve run {n} to {args.serve_json}",
                   flush=True)
-        record = {
-            "platform": jax.default_backend(),
-            "git_sha": _git_sha(),
-            "quick": bool(args.quick),
-            "cells": cells,
-        }
-        runs = _load_runs(args.serve_json)
-        runs.append(record)
-        tmp = args.serve_json + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump({"runs": runs}, f, indent=2, sort_keys=True)
-        os.replace(tmp, args.serve_json)
-        print(f"appended run {len(runs)} to {args.serve_json}", flush=True)
+        if "fig9_replay" in figs:
+            from benchmarks import fig9_replay
+
+            cells = fig9_replay.replay_record(quick=args.quick)
+            for name, c in cells.items():
+                print(f"replay,{name},p99_ms={c['tick_ms_p99']:.2f} "
+                      f"done={c['completed']}/{c['requests']} "
+                      f"frag={c['frag_ratio_final']:.3f}", flush=True)
+            n = append_serve_record(args.serve_json, dict(
+                envelope(), record="replay", cells=cells))
+            print(f"appended replay run {n} to {args.serve_json}",
+                  flush=True)
 
 
 def _git_sha() -> str:
@@ -223,39 +271,6 @@ def _git_sha() -> str:
             stderr=subprocess.DEVNULL).decode().strip()
     except Exception:
         return "unknown"
-
-
-def _load_runs(path: str) -> list:
-    """Existing run records; a pre-append-format file (one flat
-    jnp-vs-pallas report with ``_meta``) becomes run #1.  An
-    unparseable file raises instead of being overwritten — the whole
-    point of the append format is never to lose the trajectory."""
-    if not os.path.exists(path):
-        return []
-    with open(path) as f:
-        try:
-            data = json.load(f)
-        except ValueError as e:
-            raise SystemExit(
-                f"{path} exists but is not valid JSON ({e}); refusing "
-                f"to overwrite the perf trajectory — fix or move the "
-                f"file and rerun") from e
-    if isinstance(data, dict) and isinstance(data.get("runs"), list):
-        return data["runs"]
-    if isinstance(data, dict) and "runs" in data:
-        # new-format marker with a mangled value: never "migrate" it.
-        raise SystemExit(
-            f"{path} has a 'runs' key that is not a list; refusing to "
-            f"rewrite a damaged trajectory file")
-    if isinstance(data, dict) and data:
-        meta = data.pop("_meta", {})
-        return [{"platform": meta.get("platform", "unknown"),
-                 "git_sha": "pre-append-format",
-                 "quick": meta.get("quick"),
-                 "variants": data}]
-    raise SystemExit(
-        f"{path} holds unrecognized JSON (neither a runs list nor a "
-        f"legacy report); refusing to overwrite it")
 
 
 if __name__ == "__main__":

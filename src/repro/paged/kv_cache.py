@@ -166,6 +166,55 @@ def make_kv_allocator(num_pages: int, backend: str = "jnp",
                       num_shards=num_shards), 64, physical_pages)
 
 
+def modality_page_quota(cfg, page_bytes: int = 256) -> int:
+    """Arena pages of per-sequence state residency BEYOND the KV pages
+    — the per-modality allocation policy (DESIGN.md §13).
+
+    The paper's claim is ONE dynamic allocator for heterogeneous
+    workloads, so every model family's per-sequence state rides the
+    same Ouroboros arena the KV pages come from.  Attention KV grows
+    page-by-page with the sequence (``make_kv_allocator``); what this
+    helper sizes is the O(1)-per-sequence state the other families
+    carry instead of (or on top of) KV:
+
+    - ``ssm`` (mamba2): the SSD recurrent state — ``(nheads, headdim,
+      state)`` f32 plus the ``(conv-1, conv_dim)`` bf16 convolution
+      tail, per layer;
+    - ``hybrid`` (recurrentgemma): the RG-LRU recurrence — ``(lru_width,)``
+      f32 hidden plus the ``(3, lru_width)`` bf16 conv tail, per
+      recurrent (non-attention) layer;
+    - ``moe`` (mixtral, phi3.5): the routed expert activation buffers —
+      ``top_k × d_ff`` bf16 per MoE layer;
+    - dense / enc-dec / vlm: 0 (their per-sequence state is entirely
+      KV pages).
+
+    The serving engine grants this many pages per slot at admission
+    (``slot_aux``) and frees them at retirement/eviction/cancel, so
+    SSM and MoE traffic exercises the allocator even though their
+    state tensors live in dense device arrays.
+
+    >>> from repro.configs import get_arch
+    >>> from repro.paged.kv_cache import modality_page_quota
+    >>> modality_page_quota(get_arch("qwen2-0.5b").smoke())
+    0
+    >>> modality_page_quota(get_arch("mamba2-780m").smoke()) > 0
+    True
+    """
+    if cfg.family == "ssm":
+        conv_dim = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+        per_layer = (cfg.ssm_nheads * cfg.ssm_headdim * cfg.ssm_state * 4
+                     + (cfg.ssm_conv - 1) * conv_dim * 2)
+        return -(-cfg.num_layers * per_layer // page_bytes)
+    if cfg.family == "hybrid":
+        r = cfg.lru_width or cfg.d_model
+        n_rec = cfg.num_layers - cfg.num_layers // cfg.attn_period
+        return -(-n_rec * (r * 4 + 3 * r * 2) // page_bytes)
+    if cfg.num_experts:
+        buf = cfg.num_layers * cfg.num_experts_per_tok * cfg.d_ff * 2
+        return -(-buf // page_bytes)
+    return 0
+
+
 def scatter_grant_words(page_table, page_counts, lane_slot, lane_rank,
                         lane_offs, grant_ok, wpp: int):
     """Scatter freshly granted arena WORD offsets into the device page

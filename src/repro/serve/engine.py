@@ -220,11 +220,18 @@ class ServingEngine:
         # kernel launch.
         self.num_shards = num_shards
         self.rebalance_threshold = rebalance_threshold
+        self.page_bytes = 256  # logical bytes per page in the heap
+        # per-modality page policy (DESIGN.md §13): SSM/recurrent state
+        # and MoE expert buffers ride the SAME arena as KV pages —
+        # aux_pages per slot are granted at admission and freed at
+        # retirement/eviction/cancel.  0 for dense/enc-dec/vlm, so
+        # those engines are sized and behave exactly as before.
+        self.aux_pages = KV.modality_page_quota(cfg, self.page_bytes)
         self.ouro, self.wpp, physical_pages = KV.make_kv_allocator(
-            self.num_pages, backend=alloc_backend,
+            self.num_pages + max_batch * self.aux_pages,
+            backend=alloc_backend,
             lowering=alloc_lowering, num_shards=num_shards)
         self.alloc_state = self.ouro.init()
-        self.page_bytes = 256  # logical bytes per page in the heap
         self._shard_words = (self.ouro.layout.shard_words
                              if num_shards > 1
                              else self.ouro.cfg.total_words)
@@ -237,6 +244,10 @@ class ServingEngine:
             num_pages=physical_pages)
         self.slot_req: List[Optional[Request]] = [None] * max_batch
         self.slot_pages: List[List[int]] = [[] for _ in range(max_batch)]
+        # per-modality aux pages (SSM state / MoE expert buffers) held
+        # by each admitted slot — host-side in BOTH decode modes (the
+        # quota is static per arch, so nothing device-resident needed)
+        self.slot_aux: List[List[int]] = [[] for _ in range(max_batch)]
         self.slot_len = np.zeros(max_batch, np.int64)  # host truth
         self.waiting: List[Request] = []
         self._uid = 0
@@ -299,6 +310,12 @@ class ServingEngine:
                       # evicted + requeued when defrag could not
                       # reclaim enough pages
                       "evictions": 0,
+                      # client abandonment (DESIGN.md §13): requests
+                      # cancelled mid-stream or in the waiting queue
+                      "cancels": 0,
+                      # per-modality page policy: arena pages each
+                      # admitted slot holds beyond KV (0 = dense)
+                      "aux_pages_per_slot": self.aux_pages,
                       "defrag_waves": 0,
                       "rebalance_waves": 0,
                       "auto_defrag_waves": 0,
@@ -398,6 +415,9 @@ class ServingEngine:
             pages = pt[pt >= 0]
             shard = pages * self.wpp // self._shard_words
             np.add.at(self._shard_pages, shard, 1)
+        for aux in self.slot_aux:  # aux pages never enter the table
+            for p in aux:
+                self._shard_pages[p * self.wpp // self._shard_words] += 1
         self.stats["shard_pages_live"] = [int(x) for x in
                                           self._shard_pages]
 
@@ -430,6 +450,26 @@ class ServingEngine:
             return False
         self._map_granted([slot] * missing, got)
         return True
+
+    def _alloc_aux(self, slot: int) -> bool:
+        """Grant the slot its per-modality aux pages (SSM state / MoE
+        expert buffers — DESIGN.md §13) out of the SAME arena the KV
+        pages come from: ONE bulk transaction for the whole quota.
+        Partial grants are returned on failure so allocs/frees stay
+        balanced."""
+        if self.aux_pages == 0:
+            return True
+        got = self._alloc_pages([slot % self.num_shards]
+                                * self.aux_pages)
+        if any(g < 0 for g in got):
+            self._bulk_free([g for g in got if g >= 0])
+            return False
+        self.slot_aux[slot] = got
+        return True
+
+    def _free_aux(self, slot: int):
+        self._bulk_free(self.slot_aux[slot])
+        self.slot_aux[slot] = []
 
     def _map_granted(self, slots: List[int], pages: List[int]):
         """Extend the slots' page tables with freshly granted page ids
@@ -517,7 +557,7 @@ class ServingEngine:
         mapping: Dict[int, int] = {int(s): int(d)
                                    for s, d in zip(sp, dp) if s >= 0}
         total = len(mapping)
-        for pages in self.slot_pages:
+        for pages in self.slot_pages + self.slot_aux:
             for i, p in enumerate(pages):
                 if p in mapping:
                     old_sh = p * self.wpp // self._shard_words
@@ -556,7 +596,11 @@ class ServingEngine:
                 continue
             req = self.waiting.pop(0)
             lp = len(req.prompt)
+            if not self._alloc_aux(slot):
+                self.waiting.insert(0, req)  # heap full; retry later
+                break
             if not self._map_pages(slot, lp + 1):
+                self._free_aux(slot)
                 self.waiting.insert(0, req)  # heap full; retry later
                 break
             # single-row prefill (padded batch keeps jit cache small)
@@ -564,8 +608,18 @@ class ServingEngine:
             toks[slot] = req.prompt
             batch = {"tokens": jnp.asarray(toks)}
             if self.cfg.modality == "audio":
+                # FIXED encoder length: resident rows keep their cross-
+                # KV through merge_rows, so every admission must produce
+                # identically-shaped cross_k/cross_v — staggered prompts
+                # of different lengths would otherwise be unmergeable.
+                # The stub frontend is zeros; ``src_valid`` masks the
+                # padding out of cross attention (kv_valid_len).
+                sv = np.zeros(self.max_batch, np.int32)
+                sv[slot] = lp
                 batch["src_embeds"] = jnp.zeros(
-                    (self.max_batch, lp, self.cfg.d_model), jnp.float32)
+                    (self.max_batch, self.max_seq, self.cfg.d_model),
+                    jnp.float32)
+                batch["src_valid"] = jnp.asarray(sv)
             kv = self._kv()
             row_mask = np.zeros(self.max_batch, bool)
             row_mask[slot] = True
@@ -826,6 +880,7 @@ class ServingEngine:
             pt = kv.page_table.at[slot].set(-1)
             sl = kv.seq_lens.at[slot].set(0)
             self._set_kv(kv._replace(page_table=pt, seq_lens=sl))
+        self._free_aux(slot)
         ms = self.mega_state
         self.mega_state = MegaState(
             last_tok=ms.last_tok.at[slot].set(0),
@@ -856,14 +911,13 @@ class ServingEngine:
             return None
         return max(slots, key=lambda s: int(self._admit_ord[s]))
 
-    def _evict_slot(self, slot: int):
-        """Evict one active slot: free every page it holds back
-        through the allocator, zero its slot state (host and device),
-        and push its request to the FRONT of the waiting queue with
-        its generated tokens discarded — re-admission replays the
-        identical stream (greedy decode is deterministic), so one
-        oversized burst degrades throughput instead of killing the
-        server.  Counted in ``stats["evictions"]``."""
+    def _drop_slot(self, slot: int) -> Request:
+        """Free EVERY page an active slot holds (KV + modality aux)
+        back through the allocator and zero its slot state, host and
+        device — the shared teardown under eviction (which requeues)
+        and cancellation (which drops).  Allocs/frees stay balanced:
+        the frees here are counted exactly like retirement frees.
+        Returns the slot's request."""
         req = self.slot_req[slot]
         kv = self._kv()
         if self.mega_step:
@@ -888,18 +942,59 @@ class ServingEngine:
         else:
             self._bulk_free(self.slot_pages[slot])
             self.slot_pages[slot] = []
+        self._free_aux(slot)
         kv = self._kv()
         if kv is not None:
             self._set_kv(kv._replace(
                 page_table=kv.page_table.at[slot].set(-1),
                 seq_lens=kv.seq_lens.at[slot].set(0)))
-        req.out_tokens = []
-        req.done = False
-        self.waiting.insert(0, req)
         self.slot_req[slot] = None
         self.slot_len[slot] = 0
         self._admit_ord[slot] = 0
+        return req
+
+    def _evict_slot(self, slot: int):
+        """Evict one active slot: free every page it holds back
+        through the allocator, zero its slot state (host and device),
+        and push its request to the FRONT of the waiting queue with
+        its generated tokens discarded — re-admission replays the
+        identical stream (greedy decode is deterministic), so one
+        oversized burst degrades throughput instead of killing the
+        server.  Counted in ``stats["evictions"]``."""
+        req = self._drop_slot(slot)
+        req.out_tokens = []
+        req.done = False
+        self.waiting.insert(0, req)
         self.stats["evictions"] += 1
+
+    def cancel(self, uid: int) -> bool:
+        """Cancel a request — the client-abandonment path (DESIGN.md
+        §13).  Three cases, all legal between any two steps:
+
+        - uid still in the **waiting queue**: removed before it ever
+          touches a slot;
+        - uid **active in a slot**: every page the slot holds (KV +
+          modality aux) is freed back through the allocator in bulk —
+          allocs and frees stay balanced — and the slot opens for the
+          next admission;
+        - uid **already retired** (or never submitted): a no-op
+          returning ``False``, never a ``KeyError`` — retirement
+          legitimately races a client's hangup.
+
+        Returns True iff the request was actually cancelled; counted
+        in ``stats["cancels"]``."""
+        for i, r in enumerate(self.waiting):
+            if r.uid == uid:
+                self.waiting.pop(i)
+                self.stats["cancels"] += 1
+                return True
+        for slot in range(self.max_batch):
+            r = self.slot_req[slot]
+            if r is not None and r.uid == uid:
+                self._drop_slot(slot)
+                self.stats["cancels"] += 1
+                return True
+        return False
 
     # ---- main loop -----------------------------------------------------------
     def _grow_active(self, active: List[int]) -> List[int]:
@@ -977,6 +1072,7 @@ class ServingEngine:
     def _release(self, slot: int):
         self._bulk_free(self.slot_pages[slot])
         self.slot_pages[slot] = []
+        self._free_aux(slot)
         kv = self._kv()
         if kv is not None:
             pt = kv.page_table.at[slot].set(-1)
@@ -1054,6 +1150,8 @@ class ServingEngine:
             "waiting": [_req_to_json(r) for r in self.waiting],
             "slot_pages": [[int(p) for p in ps]
                            for ps in self.slot_pages],
+            "slot_aux": [[int(p) for p in ps]
+                         for ps in self.slot_aux],
             "shard_pages": [int(x) for x in self._shard_pages],
             "stats": {k: v for k, v in self.stats.items()},
         }
@@ -1158,6 +1256,9 @@ class ServingEngine:
         self.waiting = [_req_from_json(d) for d in meta["waiting"]]
         self.slot_pages = [[int(p) for p in ps]
                            for ps in meta["slot_pages"]]
+        self.slot_aux = [[int(p) for p in ps]
+                         for ps in meta.get(
+                             "slot_aux", [[]] * self.max_batch)]
         self._uid = int(meta["uid"])
         self._admit_counter = int(meta["admit_counter"])
         self._admit_ord = np.asarray(meta["admit_ord"], np.int64)
@@ -1166,7 +1267,8 @@ class ServingEngine:
         # lowering / launch count THIS process runs) stay fresh
         identity = {"arena_mem_words", "arena_ctl_words",
                     "alloc_backend", "alloc_lowering", "num_shards",
-                    "mega_step", "launches_per_tick"}
+                    "mega_step", "launches_per_tick",
+                    "aux_pages_per_slot"}
         for k, v in meta["stats"].items():
             if k in self.stats and k not in identity:
                 self.stats[k] = v

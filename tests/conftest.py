@@ -44,6 +44,14 @@ def pytest_configure(config):
         "(DESIGN.md §12; the forced-blocked CI job runs this marker, "
         "and the nightly job adds a kill-and-resume smoke on "
         "launch/serve.py)")
+    config.addinivalue_line(
+        "markers",
+        "replay: exercises the traffic-replay harness — seeded trace "
+        "generation, client abandonment/cancellation, mega-vs-host "
+        "parity, and the all-archs serving smoke (serve/replay.py, "
+        "DESIGN.md §13; the forced-blocked CI job runs this marker, "
+        "and the nightly job adds the two-scenario fig9 benchmark "
+        "smoke)")
 
 
 def pytest_collection_modifyitems(config, items):

@@ -208,6 +208,70 @@ def test_alloc_model_fallback(variant, seed):
     check_model_trace(variant, _random_ops(rng), seed)
 
 
+# ---- grow_lanes lane routing (decode mega-step entry) ---------------------
+#
+# transactions.grow_lanes is the searchsorted-over-cumsum expansion the
+# fused decode tick uses to turn a per-slot page-need vector into
+# allocation lanes; until now it was only covered through engine-level
+# traces.  The host-truth reference is the obvious repeat-and-slice.
+
+def _ref_grow_lanes(need, lanes):
+    need = np.asarray(need, np.int64)
+    slot = np.repeat(np.arange(need.shape[0]), need)[:lanes]
+    rank = np.concatenate(
+        [np.arange(n, dtype=np.int64) for n in need] or
+        [np.zeros(0, np.int64)])[:lanes]
+    mask = np.arange(lanes) < slot.shape[0]
+    return slot, rank, mask
+
+
+def check_grow_lanes(need, lanes):
+    from repro.core.transactions import grow_lanes
+
+    slot, rank, mask = grow_lanes(jnp.asarray(need, jnp.int32), lanes)
+    slot, rank, mask = map(np.asarray, (slot, rank, mask))
+    rslot, rrank, rmask = _ref_grow_lanes(need, lanes)
+    assert (mask == rmask).all(), (need, lanes, mask, rmask)
+    k = int(rmask.sum())
+    assert (slot[:k] == rslot).all(), (need, lanes, slot, rslot)
+    assert (rank[:k] == rrank).all(), (need, lanes, rank, rrank)
+    assert (rank[k:] == 0).all(), "masked lanes must pin rank to 0"
+
+
+@pytest.mark.parametrize("need,lanes", [
+    ([0, 0, 0, 0], 8),          # all lanes zero-need → all masked
+    ([0], 1),
+    ([7], 4),                   # one slot wants the whole budget + more
+    ([4], 4),                   # ...exactly the budget
+    ([0, 9, 0], 6),             # truncation inside a middle slot
+    ([2, 0, 1], 3),             # zero-need slot between live ones
+    ([1, 1, 1, 1], 2),          # truncation across slots
+    ([3, 5], 8),                # exact fill, no masked tail
+    ([0, 0, 2], 8),             # demand only in the last slot
+])
+def test_grow_lanes_edges(need, lanes):
+    check_grow_lanes(need, lanes)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=50, deadline=None,
+              suppress_health_check=list(HealthCheck))
+    @given(need=st.lists(st.integers(0, 9), min_size=1, max_size=8),
+           lanes=st.integers(1, 24))
+    def test_grow_lanes_property(need, lanes):
+        check_grow_lanes(need, lanes)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_grow_lanes_property_fallback(seed):
+    """Seeded stand-in for the hypothesis property above."""
+    rng = np.random.default_rng(seed)
+    for _ in range(50):
+        B = int(rng.integers(1, 9))
+        need = [int(n) for n in rng.integers(0, 10, B)]
+        check_grow_lanes(need, int(rng.integers(1, 25)))
+
+
 @pytest.mark.compiled_lowering
 @pytest.mark.parametrize("variant", ("page", "chunk", "va_page",
                                      "vl_chunk"))

@@ -154,3 +154,39 @@ def test_design_s12_crash_safe_serving_documented():
                    "REQ <uid>", "evictions", "youngest",
                    "refresh_frag_stats", "exit"):
         assert needle in sec, f"DESIGN.md §12 lost {needle!r}"
+
+
+# ---- DESIGN.md §13: the traffic-replay harness ----------------------------
+
+def test_design_s13_replay_documented():
+    """The §13 contract keywords tests/test_replay.py and the fig9
+    benchmark rely on stay documented: the traffic model, the
+    per-modality page policy, the cancellation states, the parity the
+    harness asserts, and the conservation invariant."""
+    sec = DOC.read_text().split("## §13")[1].split("\n## §")[0]
+    for needle in ("generate_trace", "Poisson", "burst", "abandon",
+                   "cancel(uid)", "waiting", "retired",
+                   "modality_page_quota", "aux", "replay_pair",
+                   "token-for-token", "allocs == frees",
+                   "assert_conserved", "p50", "p99",
+                   "BENCH_serve.json", "fig9_replay"):
+        assert needle in sec, f"DESIGN.md §13 lost {needle!r}"
+
+
+def test_design_s13_pins_serve_record_schema():
+    """§13 documents the BENCH_serve.json record schema; the live
+    schema constants must appear there verbatim so the validator and
+    the doc cannot drift apart."""
+    from benchmarks.common import (REPLAY_CELL_KEYS, SERVE_RECORD_KEYS,
+                                   SERVE_RECORD_KINDS)
+
+    sec = DOC.read_text().split("## §13")[1].split("\n## §")[0]
+    for kind in SERVE_RECORD_KINDS:
+        assert f'"{kind}"' in sec, (
+            f"DESIGN.md §13 lost record kind {kind!r}")
+    for key in SERVE_RECORD_KEYS:
+        assert f"`{key}`" in sec, (
+            f"DESIGN.md §13 lost envelope key {key!r}")
+    for key in REPLAY_CELL_KEYS:
+        assert f"`{key}`" in sec, (
+            f"DESIGN.md §13 lost replay telemetry key {key!r}")
