@@ -158,13 +158,15 @@ def pallas_calls_per_defrag_wave(variant: str, backend: str = "pallas",
 
 
 def launches_per_tick(engine) -> int:
-    """pallas_call launch count of ONE fused decode mega-step tick,
-    read off the engine's own mega jaxpr.  A thin delegate to
-    ``ServingEngine.launches_per_tick`` — the SAME counter feeds
-    ``engine.stats["launches_per_tick"]`` and the fig8 serving records,
-    so the two can never disagree.  Constant in ``max_batch`` (the tick
-    is one jitted program; the grow transaction is a single kernel):
-    1 with ``alloc_backend="pallas"``, 0 with the jnp oracle."""
+    """pallas_call launch count of ONE decode tick, read off the
+    engine's own jaxprs (the fused mega-step program, or — host mode —
+    the jitted decode plus its bulk-grow transaction).  A thin
+    delegate to ``ServingEngine.launches_per_tick`` — the SAME counter
+    feeds ``engine.stats["launches_per_tick"]`` and the fig8 serving
+    records, so the two can never disagree.  Constant in ``max_batch``
+    (each tick is a fixed set of jitted programs; the grow transaction
+    is a single kernel): 1 with ``alloc_backend="pallas"``, 0 with the
+    jnp oracle in mega mode."""
     return engine.launches_per_tick()
 
 
@@ -210,7 +212,18 @@ REPLAY_CELL_KEYS = (
     "queue_wait_p99", "evictions", "defrag_waves", "auto_defrag_waves",
     "pages_migrated", "aux_pages_per_slot", "allocs", "frees",
     "frag_ratio_final",
+) + (
+    # compile-pollution split (DESIGN.md §14): ticks that paid a jit
+    # first-call are summed into compile_ms and EXCLUDED from the
+    # steady percentiles; the unsplit p50/p99 above keep their
+    # all-ticks meaning so old records stay comparable.  Cells written
+    # before the split exist in the append-only trajectory; the
+    # validator grandfathers a cell carrying NONE of these three,
+    # like pre-``record`` envelopes, but a cell with any must have all.
+    "compile_ms", "tick_ms_p50_steady", "tick_ms_p99_steady",
 )
+
+REPLAY_STEADY_KEYS = REPLAY_CELL_KEYS[-3:]
 
 
 def validate_serve_record(record) -> str:
@@ -221,8 +234,10 @@ def validate_serve_record(record) -> str:
     :data:`SERVE_RECORD_KINDS` — absent kind means a legacy fig8
     record and validates as ``"serve"``.  ``replay`` cells must carry
     every telemetry key in :data:`REPLAY_CELL_KEYS` (the p50/p99 +
-    fragmentation trajectory future PRs diff against).  Raises
-    ``ValueError`` with the offending key on any violation."""
+    fragmentation trajectory future PRs diff against); cells written
+    before the :data:`REPLAY_STEADY_KEYS` compile split are
+    grandfathered without them.  Raises ``ValueError`` with the
+    offending key on any violation."""
     if not isinstance(record, dict):
         raise ValueError(f"serve record must be a dict, got "
                          f"{type(record).__name__}")
@@ -242,7 +257,13 @@ def validate_serve_record(record) -> str:
                          f"dict, got {cells!r}")
     if kind == "replay":
         for name, cell in cells.items():
-            missing = [k for k in REPLAY_CELL_KEYS if k not in cell]
+            required = REPLAY_CELL_KEYS
+            if not any(k in cell for k in REPLAY_STEADY_KEYS):
+                # a cell predating the §14 compile split: grandfather
+                # it in rather than rewriting the append-only history
+                required = [k for k in required
+                            if k not in REPLAY_STEADY_KEYS]
+            missing = [k for k in required if k not in cell]
             if missing:
                 raise ValueError(f"replay cell {name!r} missing "
                                  f"telemetry keys {missing}")

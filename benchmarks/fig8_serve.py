@@ -15,12 +15,15 @@ in interpret mode, so on CPU the jnp column is the perf signal and the
 pallas column is a correctness/trajectory record; mega-vs-host on the
 SAME backend is meaningful on both platforms.
 
-``launches_per_tick`` rides along on mega cells — the launch count of
-one fused decode tick read off the jaxpr (benchmarks/common.py
-delegates to the engine, so stats and records always agree): 1 with
-``alloc_backend="pallas"`` (the bulk grow transaction; attention is the
-jnp paged path on the decode hot loop), 0 with the jnp oracle, and
-constant in ``max_batch`` either way.
+``launches_per_tick`` rides along on EVERY cell — the launch count of
+one decode tick read off the jaxprs (benchmarks/common.py delegates to
+the engine, so stats and records always agree).  Mega cells count the
+fused tick program; host cells count the jitted decode plus the
+bulk-grow transaction dispatched around it, so host-vs-mega launch
+records are directly comparable: 1 with ``alloc_backend="pallas"``
+(the bulk grow transaction; attention is the jnp paged path on the
+decode hot loop), 0 with the jnp oracle in mega mode, and constant in
+``max_batch`` either way.
 """
 from __future__ import annotations
 
@@ -86,7 +89,7 @@ def serve_cell(*, mega: bool, backend: str = "jnp",
         "tokens_per_s_all": toks1 / max(dt1, 1e-9),
         "tokens_per_s": toks2 / max(dt2, 1e-9),
         "alloc_txns": eng.stats["alloc_txns"],
-        "launches_per_tick": (eng.launches_per_tick() if mega else None),
+        "launches_per_tick": eng.launches_per_tick(),
     }
     return row
 

@@ -35,10 +35,21 @@ Layouts are pure host math — cheap to inspect:
 (0, 16384)
 >>> [r.name for r in lay.regions]
 ['heap', 'pool_store', 'queue_store']
->>> lay.ctl_words == 4 * cfg.num_classes + 2
+>>> lay.core_ctl_words == 4 * cfg.num_classes + 2
+True
+>>> lay.ctl_words == lay.core_ctl_words + lay.tele_words
 True
 >>> print(lay.describe().splitlines()[1])
   mem[0:16384]  heap (16384,)
+
+The ctl block carries a fixed-offset telemetry region after the core
+counters (DESIGN.md §14): per-class alloc/free/failure counts, ring
+wraparounds, segment grow/shrink totals, and the overflow-walk depth
+histogram.  Both kernel lowerings update it in-place inside the one
+transaction ``pallas_call`` and the jnp oracle is its bit-exact
+reference (``repro.obs.telemetry`` owns the update math and the host
+decoder); transactions that do not account traffic (defrag waves,
+compact) carry the words through unchanged.
 """
 from __future__ import annotations
 
@@ -56,6 +67,11 @@ from repro.core.heap import HeapConfig
 
 KINDS = ("page", "chunk")
 QUEUE_FAMILIES = ("ring", "va", "vl")
+
+# Overflow-walk depth histogram width in the ctl telemetry region:
+# bins 0..6 count lanes served at that walk attempt, bin 7 collects
+# every deeper attempt (walks are bounded by num_shards - 1 anyway).
+TELE_WALK_BINS = 8
 
 
 class Arena(NamedTuple):
@@ -124,8 +140,19 @@ class ArenaLayout:
         return self.regions[-1].end
 
     @property
-    def ctl_words(self) -> int:
+    def core_ctl_words(self) -> int:
+        """Words the transaction *state* occupies: per-class front/back/
+        head/tail plus the pool's front/back.  Everything after them is
+        the telemetry region."""
         return 4 * self.num_classes + 2
+
+    @property
+    def tele_words(self) -> int:
+        return 4 * self.num_classes + 3 + TELE_WALK_BINS
+
+    @property
+    def ctl_words(self) -> int:
+        return self.core_ctl_words + self.tele_words
 
     def region(self, name: str) -> Region:
         for r in self.regions:
@@ -162,6 +189,64 @@ class ArenaLayout:
     def off_pool_back(self) -> int:
         return 4 * self.num_classes + 1
 
+    # telemetry region (DESIGN.md §14; repro.obs.telemetry owns the
+    # update math) — fixed offsets right after the core counters -----------
+    @property
+    def off_t_alloc(self) -> int:
+        return self.core_ctl_words
+
+    @property
+    def off_t_free(self) -> int:
+        return self.off_t_alloc + self.num_classes
+
+    @property
+    def off_t_fail(self) -> int:
+        return self.off_t_free + self.num_classes
+
+    @property
+    def off_t_wrap(self) -> int:
+        return self.off_t_fail + self.num_classes
+
+    @property
+    def off_t_grow(self) -> int:
+        return self.off_t_wrap + self.num_classes
+
+    @property
+    def off_t_shrink(self) -> int:
+        return self.off_t_grow + 1
+
+    @property
+    def off_t_pool_wrap(self) -> int:
+        return self.off_t_shrink + 1
+
+    @property
+    def off_t_walk(self) -> int:
+        return self.off_t_pool_wrap + 1
+
+    def tele_fields(self) -> Tuple[Tuple[str, int, int], ...]:
+        """(name, ctl offset, words) rows of the telemetry region, in
+        layout order — the table DESIGN.md §14 and the host decoder
+        (obs/telemetry.py) render from."""
+        C = self.num_classes
+        return (("t_alloc", self.off_t_alloc, C),
+                ("t_free", self.off_t_free, C),
+                ("t_fail", self.off_t_fail, C),
+                ("t_wrap", self.off_t_wrap, C),
+                ("t_grow", self.off_t_grow, 1),
+                ("t_shrink", self.off_t_shrink, 1),
+                ("t_pool_wrap", self.off_t_pool_wrap, 1),
+                ("t_walk", self.off_t_walk, TELE_WALK_BINS))
+
+    @property
+    def wrap_capacity(self) -> int:
+        """Queue positions per full turn of a class queue — the modulus
+        the wraparound counter (`t_wrap`) detects crossings of.  Ring
+        queues wrap at the store width; virtualized queues turn over a
+        full directory of segments."""
+        if self.family == "ring":
+            return self.queue_capacity
+        return self.max_segs * self.cfg.slots_per_segment(self.family)
+
     def describe(self, blocks: bool = False) -> str:
         """Human-readable offset table (DESIGN.md §7 is rendered from
         this, and a test pins the two together).  ``blocks=True``
@@ -190,6 +275,8 @@ class ArenaLayout:
                            ("tail", self.off_tail, C),
                            ("pool_front", self.off_pool_front, 1),
                            ("pool_back", self.off_pool_back, 1)):
+            lines.append(f"  ctl[{off}:{off + w}]  {nm}")
+        for nm, off, w in self.tele_fields():
             lines.append(f"  ctl[{off}:{off + w}]  {nm}")
         return "\n".join(lines)
 
@@ -250,9 +337,17 @@ def _take(lay: ArenaLayout, mem, name: str):
     return jax.lax.slice(mem, (r.offset,), (r.end,)).reshape(r.shape)
 
 
+def tele_of(lay: ArenaLayout, ctl):
+    """View of the telemetry region inside one ctl block."""
+    return jax.lax.slice(ctl, (lay.core_ctl_words,), (lay.ctl_words,))
+
+
 def pack(lay: ArenaLayout, q, ctx: queues.AllocCtx,
-         meta: Optional[ChunkMeta]) -> Arena:
-    """Flatten the view pytrees into one (mem, ctl) arena."""
+         meta: Optional[ChunkMeta], tele=None) -> Arena:
+    """Flatten the view pytrees into one (mem, ctl) arena.  ``tele`` is
+    the telemetry region to carry into the rebuilt ctl block — ``None``
+    (a fresh arena) zeroes it; transactions pass the incoming region
+    through (obs/telemetry.py then applies the counter deltas)."""
     C = lay.num_classes
     parts = [ctx.heap, ctx.pool.store.reshape(-1)]
     if lay.family == "ring":
@@ -267,8 +362,11 @@ def pack(lay: ArenaLayout, q, ctx: queues.AllocCtx,
         parts.append(meta.free_count)
         parts.append(meta.chunk_class)
     mem = jnp.concatenate(parts)
+    if tele is None:
+        tele = jnp.zeros(lay.tele_words, jnp.int32)
     ctl = jnp.concatenate([q.front, q.back, head, tail,
-                           ctx.pool.front, ctx.pool.back]).astype(jnp.int32)
+                           ctx.pool.front, ctx.pool.back,
+                           tele]).astype(jnp.int32)
     return Arena(mem=mem, ctl=ctl)
 
 

@@ -360,7 +360,10 @@ def insert_rebuild_math(cfg: HeapConfig, kind: str, family: str, mem,
         rk = groups.masked_prefix_sum(jnp.ones(nc, jnp.int32), live_c)
         q, ctx = fam.bulk_enqueue(cfg, q, ctx, jnp.full(nc, c, jnp.int32),
                                   rk, ids, live_c)
-    new = arena.pack(lay, q, ctx, meta)
+    # a defrag wave is not allocator traffic: the ctl telemetry region
+    # (DESIGN.md §14) carries through unchanged — matching the blocked
+    # kernels, which stage the full ctl block and rewrite core words only
+    new = arena.pack(lay, q, ctx, meta, tele=arena.tele_of(lay, ctl))
     return new.mem, new.ctl
 
 

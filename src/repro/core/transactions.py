@@ -78,22 +78,40 @@ def init(cfg: HeapConfig, kind: str, family: str, num_shards: int = 1):
 
 
 # ---- pure transaction math (shared by both backends) ----------------------
+#
+# Telemetry (DESIGN.md §14): both transactions thread the incoming ctl
+# telemetry region through ``arena.pack`` and advance it via the
+# obs/telemetry.py delta math — the whole-lowering kernel body calls
+# these functions directly, so its telemetry is structurally identical;
+# the blocked lowering reproduces the same deltas per class step.
 
 def alloc_math(cfg: HeapConfig, kind: str, family: str, mem, ctl,
-               sizes_bytes, mask) -> Tuple:
+               sizes_bytes, mask, attempt=0) -> Tuple:
+    """``attempt`` is the overflow-walk attempt this call serves — 0
+    for single-arena traffic; the sharded schedule passes its attempt
+    index (traced) so the walk-depth histogram attributes lanes to the
+    attempt that actually served them."""
+    from repro.obs import telemetry
     lay, st = _views(cfg, kind, family, mem, ctl)
     st, offs = _impl(kind).alloc(cfg, family, st, sizes_bytes, mask, "jnp")
-    new = arena.pack(lay, st.q, st.ctx, st.meta)
-    return new.mem, new.ctl, offs
+    new = arena.pack(lay, st.q, st.ctx, st.meta,
+                     tele=arena.tele_of(lay, ctl))
+    new_ctl = telemetry.alloc_update(lay, ctl, new.ctl, sizes_bytes,
+                                     mask, offs, attempt)
+    return new.mem, new_ctl, offs
 
 
 def free_math(cfg: HeapConfig, kind: str, family: str, mem, ctl,
               offsets_words, sizes_bytes, mask) -> Tuple:
+    from repro.obs import telemetry
     lay, st = _views(cfg, kind, family, mem, ctl)
     st = _impl(kind).free(cfg, family, st, offsets_words, sizes_bytes,
                           mask, "jnp")
-    new = arena.pack(lay, st.q, st.ctx, st.meta)
-    return new.mem, new.ctl
+    new = arena.pack(lay, st.q, st.ctx, st.meta,
+                     tele=arena.tele_of(lay, ctl))
+    new_ctl = telemetry.free_update(lay, ctl, new.ctl, sizes_bytes,
+                                    mask, offsets_words)
+    return new.mem, new_ctl
 
 
 # ---- grow-to-target-lens lane routing (decode mega-step entry) ------------
@@ -226,7 +244,9 @@ def compact(cfg: HeapConfig, kind: str, family: str,
         return state
     lay, st = _views(cfg, kind, family, state.mem, state.ctl)
     st = chunk_alloc.compact(cfg, family, st)
-    return arena.pack(lay, st.q, st.ctx, st.meta)
+    # not allocator traffic: telemetry words carry through unchanged
+    return arena.pack(lay, st.q, st.ctx, st.meta,
+                      tele=arena.tele_of(lay, state.ctl))
 
 
 # ---- defragmentation: plan (shared jnp oracle) + migrate (execute) --------
@@ -311,7 +331,7 @@ def sharded_alloc_math(cfg: HeapConfig, num_shards: int, kind: str,
             scfg, kind, family,
             jax.lax.dynamic_index_in_dim(mem, s, 0, keepdims=False),
             jax.lax.dynamic_index_in_dim(ctl, s, 0, keepdims=False),
-            sizes_bytes, sel)
+            sizes_bytes, sel, attempt=a)
         mem = jax.lax.dynamic_update_index_in_dim(mem, m2, s, 0)
         ctl = jax.lax.dynamic_update_index_in_dim(ctl, c2, s, 0)
         offs = jnp.where(sel & (local >= 0), s * Ws + local, offs)

@@ -57,13 +57,20 @@ class PreemptionGuard:
 
 
 class StepMonitor:
-    """EWMA step-time tracking + straggler flagging."""
+    """EWMA step-time tracking + straggler flagging.
+
+    With a ``registry`` (obs/metrics.py), every :meth:`stop` also
+    publishes through it — a step-time histogram
+    (``repro_step_time_ms``), the EWMA gauge, and a straggler-flag
+    counter — so training loops and the serving replay export through
+    the same funnel (DESIGN.md §14)."""
 
     def __init__(self, alpha: float = 0.1, threshold: float = 1.5,
-                 warmup: int = 2):
+                 warmup: int = 2, registry=None):
         self.alpha = alpha
         self.threshold = threshold
         self.warmup = warmup
+        self.registry = registry
         self.ewma: Optional[float] = None
         self.history = collections.deque(maxlen=512)
         self._count = 0
@@ -90,6 +97,20 @@ class StepMonitor:
                 self.ewma = float(np.median(prior)) if prior else dt
             straggler = dt > self.threshold * self.ewma
             self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
+        if self.registry is not None:
+            self.registry.histogram(
+                "repro_step_time_ms",
+                "wall-clock per monitored step").observe(1e3 * dt)
+            self.registry.counter(
+                "repro_steps_total", "monitored steps").inc()
+            if self.ewma is not None:
+                self.registry.gauge(
+                    "repro_step_time_ewma_ms",
+                    "EWMA step time (post-warmup)").set(1e3 * self.ewma)
+            if straggler:
+                self.registry.counter(
+                    "repro_straggler_flags_total",
+                    "steps flagged above threshold x EWMA").inc()
         return {"step_time": dt, "ewma": self.ewma,
                 "straggler": straggler}
 

@@ -390,7 +390,7 @@ def sharded_arena_alloc_txn(cfg, num_shards, kind, family, mem, ctl,
                & (offs_ref[...] < 0))
         nm, nc, local = transactions.alloc_math(
             scfg, kind, family, omem_ref[0, :], octl_ref[0, :],
-            sizes_ref[...], sel)
+            sizes_ref[...], sel, attempt=a)
         omem_ref[0, :] = nm
         octl_ref[0, :] = nc
         offs_ref[...] = jnp.where(sel & (local >= 0), s * Ws + local,

@@ -746,6 +746,67 @@ def _chunk_free(cfg, lay, family, c, offsets, sizes, valid_i32, E, octl,
 
 
 # --------------------------------------------------------------------------
+# ctl telemetry accumulators (DESIGN.md §14; obs/telemetry.py is the
+# bit-exact oracle)
+# --------------------------------------------------------------------------
+#
+# Every telemetry word is a pure function of observable transaction
+# state — lane inputs, granted offsets, core-counter before/after
+# values — so the scalar per-class updates below provably equal the
+# oracle's vectorized whole-transaction deltas: step c touches exactly
+# class c's front/back, and the shared pool counters telescope across
+# the sequential class steps (each step's post is the next step's pre).
+
+def _tele_bump(octl, addr, delta):
+    _st(octl, addr, _ld(octl, addr) + delta)
+
+
+def _tele_scalars(octl, lay, c):
+    """(front[c], back[c], pool_front, pool_back) — the core counters a
+    class step can move, sampled around the per-class body."""
+    return (_ld(octl, lay.off_front + c), _ld(octl, lay.off_back + c),
+            _ld(octl, lay.off_pool_front), _ld(octl, lay.off_pool_back))
+
+
+def _tele_counters(lay, octl, c, pre, post):
+    """Wrap/grow/shrink/pool-wrap deltas of one class step."""
+    f0, b0, pf0, pb0 = pre
+    f1, b1, pf1, pb1 = post
+    capw = lay.wrap_capacity
+    nc = lay.cfg.num_chunks
+    _tele_bump(octl, lay.off_t_wrap + c,
+               (f1 // capw - f0 // capw) + (b1 // capw - b0 // capw))
+    _tele_bump(octl, lay.off_t_grow, pf1 - pf0)
+    _tele_bump(octl, lay.off_t_shrink, pb1 - pb0)
+    _tele_bump(octl, lay.off_t_pool_wrap,
+               (pf1 // nc - pf0 // nc) + (pb1 // nc - pb0 // nc))
+
+
+def _tele_alloc(cfg, lay, octl, c, sizes, valid_i32, cur, new, attempt):
+    """Per-class alloc/failure counts + walk-depth histogram from the
+    step's lane transitions (``cur``/``new`` are the offsets vector
+    before/after the body, shard-local under sharding)."""
+    cls = size_to_class_device(cfg, sizes)
+    member = (valid_i32 != 0) & (cls == c)
+    served = jnp.sum((member & (cur < 0) & (new >= 0))
+                     .astype(jnp.int32))
+    failed = jnp.sum((member & (new < 0)).astype(jnp.int32))
+    _tele_bump(octl, lay.off_t_alloc + c, served)
+    _tele_bump(octl, lay.off_t_fail + c, failed)
+    nbin = jnp.minimum(jnp.asarray(attempt, jnp.int32),
+                       arena.TELE_WALK_BINS - 1)
+    _tele_bump(octl, lay.off_t_walk + nbin, served)
+
+
+def _tele_free(cfg, lay, octl, c, offsets, sizes, valid_i32):
+    """Per-class free counts — a pure function of the lane inputs."""
+    cls = size_to_class_device(cfg, sizes)
+    freed = (valid_i32 != 0) & (cls == c) & (offsets >= 0)
+    _tele_bump(octl, lay.off_t_free + c,
+               jnp.sum(freed.astype(jnp.int32)))
+
+
+# --------------------------------------------------------------------------
 # wrapper: per-region specs from the ArenaLayout, one pallas_call
 # --------------------------------------------------------------------------
 #
@@ -878,8 +939,10 @@ def _txn_call(cfg, kind, family, op, mem, ctl, lanes, n, interpret):
                 O[nm][0, :] = R[nm][0, :]
         E = {nm: O.get(nm, R[nm]) for nm in reads}
 
+        pre = _tele_scalars(octl, lay, c)
         if op == "alloc":
             offs_ref = out_refs[n_w + 1]
+            cur = offs_ref[...]
             if kind == "page":
                 fn = {"ring": _page_ring_alloc, "va": _page_va_alloc,
                       "vl": _page_vl_alloc}[family]
@@ -888,6 +951,9 @@ def _txn_call(cfg, kind, family, op, mem, ctl, lanes, n, interpret):
             else:
                 _chunk_alloc(cfg, lay, family, c, lane_vals[0],
                              lane_vals[1], E, octl, offs_ref)
+            _tele_counters(lay, octl, c, pre, _tele_scalars(octl, lay, c))
+            _tele_alloc(cfg, lay, octl, c, lane_vals[0], lane_vals[1],
+                        cur, offs_ref[...], 0)
         else:
             offsets, sizes, valid = lane_vals
             if kind == "page":
@@ -898,6 +964,8 @@ def _txn_call(cfg, kind, family, op, mem, ctl, lanes, n, interpret):
                 _chunk_free(cfg, lay, family, c, offsets, sizes, valid,
                             E, octl, out_refs[n_w + 1],
                             R["free_count"])
+            _tele_counters(lay, octl, c, pre, _tele_scalars(octl, lay, c))
+            _tele_free(cfg, lay, octl, c, offsets, sizes, valid)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1, grid=(C,),
@@ -1077,6 +1145,7 @@ def _txn_call_sharded(cfg, num_shards, walk, kind, family, op, mem, ctl,
 
         E = {nm: _wrap(nm, O.get(nm, R[nm])) for nm in reads}
 
+        pre = _tele_scalars(octl, lay, c)
         if op == "alloc":
             sizes, valid, home = lane_vals
             offs_ref = out_refs[n_w + 1]
@@ -1091,6 +1160,11 @@ def _txn_call_sharded(cfg, num_shards, walk, kind, family, op, mem, ctl,
                 _chunk_alloc(scfg, lay, family, c, sizes, sel_i, E,
                              octl, offs_ref)
             new = offs_ref[...]
+            _tele_counters(lay, octl, c, pre, _tele_scalars(octl, lay, c))
+            # counts from the shard-LOCAL offsets, mask = this visit's
+            # selection — matches the oracle's per-(attempt, shard)
+            # alloc_math telemetry attribution
+            _tele_alloc(scfg, lay, octl, c, sizes, sel_i, cur, new, a)
             offs_ref[...] = jnp.where((cur < 0) & (new >= 0),
                                       new + s * Ws, new)
         else:
@@ -1107,6 +1181,8 @@ def _txn_call_sharded(cfg, num_shards, walk, kind, family, op, mem, ctl,
                 _chunk_free(scfg, lay, family, c, local, sizes, sel_i,
                             E, octl, out_refs[n_w + 1],
                             R["free_count"])
+            _tele_counters(lay, octl, c, pre, _tele_scalars(octl, lay, c))
+            _tele_free(scfg, lay, octl, c, local, sizes, sel_i)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1, grid=(A, S, C),

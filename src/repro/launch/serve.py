@@ -12,6 +12,12 @@ stream back up token-identically.  Each completed request prints a
 stable ``REQ <uid> <tokens...>`` line, so killed-run + resumed-run
 output concatenates to exactly the uninterrupted run's output (the CI
 crash-restart smoke asserts this).
+
+Observability (DESIGN.md §14): ``--metrics-file`` periodically exports
+the metrics registry (engine stats, frag gauges, drained in-kernel
+allocator telemetry) as Prometheus text or JSON; ``--trace-file``
+emits a Chrome/Perfetto trace of engine phase spans with compile ticks
+tagged distinctly from steady-state ticks.
 """
 from __future__ import annotations
 
@@ -64,7 +70,25 @@ def main(argv=None):
                          "--snapshot-dir and resume mid-stream "
                          "(token-identically) instead of submitting "
                          "fresh requests")
+    ap.add_argument("--metrics-file", default=None, metavar="PATH",
+                    help="write the metrics registry (engine stats, "
+                         "frag gauges, drained in-kernel telemetry) to "
+                         "PATH as Prometheus text exposition "
+                         "(.json suffix → JSON) every --metrics-every "
+                         "steps and at drain (obs/metrics.py, "
+                         "DESIGN.md §14)")
+    ap.add_argument("--metrics-every", type=int, default=50,
+                    metavar="STEPS",
+                    help="steps between --metrics-file rewrites "
+                         "(default 50)")
+    ap.add_argument("--trace-file", default=None, metavar="PATH",
+                    help="emit a Chrome/Perfetto trace_event JSON of "
+                         "engine phase spans to PATH at exit — compile "
+                         "ticks tagged distinctly from steady ticks "
+                         "(obs/trace.py, DESIGN.md §14)")
     args = ap.parse_args(argv)
+    if args.metrics_every < 1:
+        ap.error("--metrics-every must be >= 1")
     if args.resume and not args.snapshot_dir:
         ap.error("--resume requires --snapshot-dir")
 
@@ -79,6 +103,10 @@ def main(argv=None):
         cfg = cfg.smoke()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
+    tracer = None
+    if args.trace_file:
+        from repro.obs.trace import Tracer
+        tracer = Tracer()
     eng = ServingEngine(model, params, max_batch=args.max_batch,
                         max_seq=args.max_seq,
                         alloc_backend=args.alloc_backend,
@@ -86,9 +114,18 @@ def main(argv=None):
                         num_shards=args.num_shards,
                         mega_step=args.mega,
                         max_new_cap=max(args.max_new, 16),
-                        defrag_threshold=args.defrag_threshold)
+                        defrag_threshold=args.defrag_threshold,
+                        tracer=tracer)
     if args.mega:
         eng.launches_per_tick()  # record into stats before serving
+
+    def write_metrics():
+        if not args.metrics_file:
+            return
+        eng.publish_metrics().write(
+            args.metrics_file,
+            fmt="json" if args.metrics_file.endswith(".json")
+            else "prometheus")
 
     guard = None
     if args.snapshot_dir:
@@ -108,8 +145,10 @@ def main(argv=None):
 
     t0 = time.time()
     done, preempted = [], False
-    for _ in range(100000):
+    for tick in range(100000):
         finished = eng.step()
+        if args.metrics_file and tick % args.metrics_every == 0:
+            write_metrics()
         for r in finished:
             # one stable line per completed stream: killed-run output +
             # resumed-run output must concatenate to the uninterrupted
@@ -128,6 +167,11 @@ def main(argv=None):
             break
     dt = time.time() - t0
     toks = sum(len(r.out_tokens) for r in done)
+    write_metrics()
+    if tracer is not None:
+        tracer.write(args.trace_file)
+        print(f"trace written to {args.trace_file} "
+              f"({len(tracer.events)} events)", flush=True)
     print(f"served {len(done)} requests, {toks} tokens in {dt:.1f}s "
           f"({toks / max(dt, 1e-9):.1f} tok/s incl. compile)")
     print(f"allocator stats: {eng.stats}")

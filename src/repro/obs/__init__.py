@@ -1,0 +1,14 @@
+"""Observability layer: in-kernel allocator telemetry, a metrics
+registry with Prometheus/JSON exposition, and Chrome-trace spans.
+
+Import surface is kept light on purpose — ``repro.core.transactions``
+pulls :mod:`repro.obs.telemetry` into every transaction, so this
+package must never import the serving stack back.
+
+- :mod:`repro.obs.telemetry` — bit-exact update math + host decoder
+  for the ctl telemetry region (DESIGN.md §14);
+- :mod:`repro.obs.metrics` — counters/gauges/histograms with labels,
+  Prometheus text exposition and JSON;
+- :mod:`repro.obs.trace` — ``trace_event`` spans for engine phases,
+  viewable in Perfetto / chrome://tracing.
+"""

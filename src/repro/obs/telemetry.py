@@ -1,0 +1,157 @@
+"""In-kernel allocator telemetry: the ctl-block accumulator region.
+
+Every arena ctl block carries a fixed-offset telemetry region after the
+core counters (``ArenaLayout.tele_fields()`` is the table; DESIGN.md
+§14 renders it).  The words are updated *inside* the existing single
+transaction ``pallas_call`` — zero extra launches — and, like every
+other arena word, the jnp math here is the bit-exact oracle both
+kernel lowerings must reproduce word for word
+(tests/test_alloc_txn_parity.py compares full ctl blocks, telemetry
+included).
+
+Field semantics (all monotonic int32 totals, per arena / per shard):
+
+``t_alloc[c]``     lanes granted an offset in class ``c``.
+``t_free[c]``      lanes freed in class ``c``.
+``t_fail[c]``      attempted-but-failed lanes in class ``c`` (masked
+                   lanes and over-large sizes — class ≥ C — are not
+                   attempts; under sharding a lane that fails on every
+                   visited shard counts one failure per visit).
+``t_wrap[c]``      full turns of class ``c``'s queue: crossings of
+                   ``ArenaLayout.wrap_capacity`` by the monotonic
+                   front/back counters.
+``t_grow``         pool pops (chunk claims + va/vl segment grows).
+``t_shrink``       pool pushes (chunk retires + segment reclaims).
+``t_pool_wrap``    full turns of the free-chunk pool ring.
+``t_walk[b]``      lanes served at overflow-walk attempt ``b`` (the
+                   last bin collects deeper attempts; single-arena
+                   traffic lands in bin 0).
+
+Every delta is a pure function of observable transaction state — lane
+inputs, granted offsets, and core-counter before/after values — which
+is what makes the scalar per-class updates of the blocked lowering
+provably equal to the vectorized oracle: per-step deltas telescope to
+the whole-transaction delta.
+
+Transactions that do not account traffic (defrag migration waves,
+``compact``) carry the region through unchanged; a defrag wave is not
+allocator traffic.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import arena
+from repro.core.heap import size_to_class_device
+
+
+def _core(lay, ctl):
+    return jax.lax.slice(ctl, (0,), (lay.core_ctl_words,))
+
+
+def _vec(lay, ctl, off, w):
+    return jax.lax.slice(ctl, (off,), (off + w,))
+
+
+def _counter_deltas(lay, old_ctl, new_ctl):
+    """Wrap/grow/shrink deltas from core-counter before/after values.
+
+    Counters are raw monotonic positions, so ``// capacity`` crossings
+    count full ring turns exactly — the same words both lowerings
+    maintain, so the delta is implementation-independent.
+    """
+    C = lay.num_classes
+    capw = lay.wrap_capacity
+    nc = lay.cfg.num_chunks
+    f0 = _vec(lay, old_ctl, lay.off_front, C)
+    f1 = _vec(lay, new_ctl, lay.off_front, C)
+    b0 = _vec(lay, old_ctl, lay.off_back, C)
+    b1 = _vec(lay, new_ctl, lay.off_back, C)
+    d_wrap = (f1 // capw - f0 // capw) + (b1 // capw - b0 // capw)
+    pf0 = old_ctl[lay.off_pool_front]
+    pf1 = new_ctl[lay.off_pool_front]
+    pb0 = old_ctl[lay.off_pool_back]
+    pb1 = new_ctl[lay.off_pool_back]
+    d_grow = pf1 - pf0
+    d_shrink = pb1 - pb0
+    d_pool_wrap = (pf1 // nc - pf0 // nc) + (pb1 // nc - pb0 // nc)
+    return d_wrap, d_grow, d_shrink, d_pool_wrap
+
+
+def _per_class(lay, cls, sel):
+    """Per-class count of selected lanes (vectorized one-hot sum)."""
+    C = lay.num_classes
+    onec = cls[:, None] == jnp.arange(C, dtype=jnp.int32)[None, :]
+    return jnp.sum(onec & sel[:, None], axis=0).astype(jnp.int32)
+
+
+def _apply(lay, new_ctl, d_alloc, d_free, d_fail, d_wrap, d_grow,
+           d_shrink, d_pool_wrap, d_walk):
+    tele = arena.tele_of(lay, new_ctl)
+    delta = jnp.concatenate([
+        d_alloc, d_free, d_fail, d_wrap,
+        jnp.stack([d_grow, d_shrink, d_pool_wrap]), d_walk,
+    ]).astype(jnp.int32)
+    return jnp.concatenate([_core(lay, new_ctl), tele + delta])
+
+
+def alloc_update(lay, old_ctl, new_ctl, sizes_bytes, mask, offs,
+                 attempt=0):
+    """Telemetry after one alloc transaction: ``new_ctl`` with the
+    accumulator region advanced.  ``attempt`` is the overflow-walk
+    attempt this call serves (0 for single-arena traffic); it may be a
+    traced value — the sharded kernels pass their grid index."""
+    C = lay.num_classes
+    cls = size_to_class_device(lay.cfg, sizes_bytes)
+    attempted = mask & (cls < C)
+    served = attempted & (offs >= 0)
+    failed = attempted & (offs < 0)
+    d_alloc = _per_class(lay, cls, served)
+    d_fail = _per_class(lay, cls, failed)
+    d_wrap, d_grow, d_shrink, d_pool_wrap = _counter_deltas(
+        lay, old_ctl, new_ctl)
+    nbin = jnp.minimum(jnp.asarray(attempt, jnp.int32),
+                       arena.TELE_WALK_BINS - 1)
+    d_walk = jnp.where(
+        jnp.arange(arena.TELE_WALK_BINS, dtype=jnp.int32) == nbin,
+        jnp.sum(served).astype(jnp.int32), 0)
+    zc = jnp.zeros(C, jnp.int32)
+    return _apply(lay, new_ctl, d_alloc, zc, d_fail, d_wrap, d_grow,
+                  d_shrink, d_pool_wrap, d_walk)
+
+
+def free_update(lay, old_ctl, new_ctl, sizes_bytes, mask, offs):
+    """Telemetry after one free transaction (no walk — an offset lives
+    on exactly one shard)."""
+    C = lay.num_classes
+    cls = size_to_class_device(lay.cfg, sizes_bytes)
+    freed = mask & (cls < C) & (offs >= 0)
+    d_free = _per_class(lay, cls, freed)
+    d_wrap, d_grow, d_shrink, d_pool_wrap = _counter_deltas(
+        lay, old_ctl, new_ctl)
+    zc = jnp.zeros(C, jnp.int32)
+    zw = jnp.zeros(arena.TELE_WALK_BINS, jnp.int32)
+    return _apply(lay, new_ctl, zc, d_free, zc, d_wrap, d_grow,
+                  d_shrink, d_pool_wrap, zw)
+
+
+# ---- host-side decoding ----------------------------------------------------
+
+def decode(lay, ctl) -> Dict[str, np.ndarray]:
+    """Drain one ctl block (or a sharded ``(S, ctl_words)`` stack) into
+    named numpy arrays — the one host sync the observability layer
+    needs per scrape.  Vector fields keep their per-class / per-bin
+    axis; sharded inputs keep a leading shard axis."""
+    c = np.asarray(ctl)
+    return {name: c[..., off:off + w] if w > 1 else c[..., off]
+            for name, off, w in lay.tele_fields()}
+
+
+def totals(lay, ctl) -> Dict[str, int]:
+    """Scalar totals over classes/bins/shards — the quick-look summary
+    ``scripts/obs_dump.py`` and the engine stats publish."""
+    return {name: int(v.sum()) for name, v in decode(lay, ctl).items()}

@@ -46,6 +46,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import Model
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.paged import kv_cache as KV
 
 
@@ -153,7 +155,8 @@ class ServingEngine:
                  rebalance_threshold: Optional[int] = None,
                  mega_step: bool = False, max_new_cap: int = 256,
                  defrag_threshold: Optional[float] = None,
-                 defrag_check_interval: int = 1):
+                 defrag_check_interval: int = 1,
+                 tracer: Optional[obs_trace.Tracer] = None):
         # Validate the allocator knobs before any expensive setup: a
         # typo like alloc_backend="palas" must fail here with the menu
         # of choices, not surface later (or worse, quietly behave like
@@ -208,6 +211,12 @@ class ServingEngine:
         self.defrag_threshold = (None if defrag_threshold is None
                                  else float(defrag_threshold))
         self.defrag_check_interval = defrag_check_interval
+        # observability (DESIGN.md §14): engine phases emit trace
+        # spans through the tracer (NULL = zero-cost no-op), host-side
+        # readings publish through the metrics registry
+        self.tracer = tracer if tracer is not None else obs_trace.NULL
+        self.metrics = obs_metrics.MetricsRegistry()
+        self.last_tick_compiled = False
 
         # --- the paper's allocator manages the page-id space -------------
         # alloc_state is the flat device-resident arena (core/arena.py:
@@ -322,8 +331,29 @@ class ServingEngine:
                       "pages_migrated": 0,
                       # decode-loop observability (DESIGN.md §11)
                       "mega_step": self.mega_step,
-                      "launches_per_tick": None}
+                      "launches_per_tick": None,
+                      # jit first-call events observed by step(): how
+                      # many of this process's ticks paid a compile
+                      # (the replay harness splits its latency summary
+                      # on exactly this signal — DESIGN.md §14)
+                      "jit_first_calls": 0}
         self.refresh_frag_stats()
+
+    def _compile_count(self) -> int:
+        """Total jit-cache entries across the jitted callables a tick
+        can dispatch — engine-owned programs plus the allocator's
+        class-level transaction jits — grows exactly when a tick
+        traced+compiled.  (The allocator jits are shared across
+        Ouroboros instances, so another engine compiling in the same
+        process can mark one of our ticks "compile" — a conservative
+        misclassification: it only withholds that tick from the steady
+        percentiles.)"""
+        fns = [self._prefill, self._decode, self._mega]
+        fns += [getattr(self.ouro, nm, None) for nm in
+                ("_alloc", "_free", "_alloc_sharded", "_free_sharded",
+                 "_alloc_pinned", "_free_pinned")]
+        return sum(fn._cache_size() for fn in fns
+                   if fn is not None and hasattr(fn, "_cache_size"))
 
     # ---- request lifecycle -------------------------------------------------
     def submit(self, prompt, max_new_tokens=32, eos_id=None) -> int:
@@ -361,14 +391,15 @@ class ServingEngine:
         home = np.zeros(lanes, np.int32)
         home[:n_pages] = homes
         self.stats["alloc_txns"] += 1
-        if self.num_shards > 1:
-            self.alloc_state, offs = self.ouro.alloc(
-                self.alloc_state, sizes, mask,
-                shard_hint=jnp.asarray(home))
-        else:
-            self.alloc_state, offs = self.ouro.alloc(self.alloc_state,
-                                                     sizes, mask)
-        offs = np.asarray(offs[:n_pages])
+        with self.tracer.span("bulk_grow", pages=n_pages):
+            if self.num_shards > 1:
+                self.alloc_state, offs = self.ouro.alloc(
+                    self.alloc_state, sizes, mask,
+                    shard_hint=jnp.asarray(home))
+            else:
+                self.alloc_state, offs = self.ouro.alloc(
+                    self.alloc_state, sizes, mask)
+            offs = np.asarray(offs[:n_pages])
         ok = offs >= 0
         self.stats["allocs"] += int(ok.sum())
         self.stats["alloc_failures"] += int((~ok).sum())
@@ -496,8 +527,9 @@ class ServingEngine:
         number of pages migrated.  Triggered automatically on
         allocation failure and past ``defrag_threshold``; also callable
         by operators between batches."""
-        self.alloc_state, fwd = self.ouro.defrag(self.alloc_state)
-        moved = self._apply_forwarding(fwd)
+        with self.tracer.span("defrag_wave"):
+            self.alloc_state, fwd = self.ouro.defrag(self.alloc_state)
+            moved = self._apply_forwarding(fwd)
         self.stats["defrag_waves"] += 1
         self.stats["pages_migrated"] += moved
         self.refresh_frag_stats()
@@ -529,8 +561,9 @@ class ServingEngine:
         live = self._shard_pages
         if int(live.max() - live.min()) <= self.rebalance_threshold:
             return
-        self.alloc_state, fwd = self.ouro.rebalance(self.alloc_state)
-        moved = self._apply_forwarding(fwd)
+        with self.tracer.span("rebalance_wave"):
+            self.alloc_state, fwd = self.ouro.rebalance(self.alloc_state)
+            moved = self._apply_forwarding(fwd)
         self.stats["rebalance_waves"] += 1
         self.stats["pages_migrated"] += moved
         self.refresh_frag_stats()
@@ -590,6 +623,87 @@ class ServingEngine:
             self.stats["frag_ratio"] = float(fs["frag_ratio"])
         return fs
 
+    # ---- observability (obs/, DESIGN.md §14) -------------------------------
+
+    def drain_telemetry(self) -> dict:
+        """Decode the arena's device-side telemetry words (the ctl
+        accumulators every lowering updates in-kernel) into a host
+        dict ``{field: np.ndarray}`` — per-class arrays carry a
+        leading shard axis when ``num_shards > 1``.  A read, not a
+        reset: the device words are monotonic."""
+        from repro.obs import telemetry as OT
+        lay = self.ouro.layout
+        if self.num_shards > 1:
+            lay = lay.shard
+        return OT.decode(lay, np.asarray(self.alloc_state.ctl))
+
+    def publish_metrics(self,
+                        registry: Optional[
+                            obs_metrics.MetricsRegistry] = None
+                        ) -> obs_metrics.MetricsRegistry:
+        """Publish every host-side reading through a metrics registry
+        (``self.metrics`` unless one is passed): engine stat counters,
+        fragmentation gauges, and the drained in-kernel telemetry
+        words, labelled by size class / shard / walk attempt.  Returns
+        the registry (export with ``to_prometheus()``/``to_json()``)."""
+        reg = self.metrics if registry is None else registry
+        counters = ("steps", "allocs", "frees", "alloc_failures",
+                    "alloc_txns", "alloc_overflows", "evictions",
+                    "cancels", "defrag_waves", "rebalance_waves",
+                    "auto_defrag_waves", "pages_migrated",
+                    "jit_first_calls")
+        for k in counters:
+            reg.counter(f"repro_engine_{k}_total",
+                        f"engine stats[{k!r}]").set(float(self.stats[k]))
+        reg.gauge("repro_engine_waiting",
+                  "requests queued for admission").set(
+                      float(len(self.waiting)))
+        reg.gauge("repro_engine_active_slots",
+                  "batch slots decoding").set(
+            float(sum(r is not None for r in self.slot_req)))
+        self.refresh_frag_stats()
+        for k in ("free_words", "largest_free_extent", "frag_ratio"):
+            g = reg.gauge(f"repro_arena_{k}",
+                          f"allocator frag_stats[{k!r}]",
+                          labelnames=("shard",))
+            v = self.stats[k]
+            for s, x in enumerate(v if isinstance(v, list) else [v]):
+                g.labels(shard=s).set(float(x))
+        tele = self.drain_telemetry()
+        per_class = {"t_alloc": "repro_alloc_granted_total",
+                     "t_free": "repro_free_total",
+                     "t_fail": "repro_alloc_failed_total",
+                     "t_wrap": "repro_ring_wrap_total"}
+        scalar = {"t_grow": "repro_segment_grow_total",
+                  "t_shrink": "repro_segment_shrink_total",
+                  "t_pool_wrap": "repro_pool_wrap_total"}
+        for field, arr in tele.items():
+            arr = np.atleast_2d(np.asarray(arr))   # (S, w)
+            if field in per_class:
+                m = reg.counter(per_class[field],
+                                f"in-kernel ctl telemetry {field}",
+                                labelnames=("shard", "size_class"))
+                for s in range(arr.shape[0]):
+                    for c in range(arr.shape[1]):
+                        m.labels(shard=s, size_class=c).set(
+                            float(arr[s, c]))
+            elif field in scalar:
+                m = reg.counter(scalar[field],
+                                f"in-kernel ctl telemetry {field}",
+                                labelnames=("shard",))
+                for s in range(arr.shape[0]):
+                    m.labels(shard=s).set(float(arr[s, 0]))
+            elif field == "t_walk":
+                m = reg.counter("repro_overflow_walk_served_total",
+                                "lanes served per overflow-walk "
+                                "attempt (in-kernel histogram)",
+                                labelnames=("shard", "attempt"))
+                for s in range(arr.shape[0]):
+                    for a in range(arr.shape[1]):
+                        m.labels(shard=s, attempt=a).set(
+                            float(arr[s, a]))
+        return reg
+
     def _admit(self):
         for slot in range(self.max_batch):
             if self.slot_req[slot] is not None or not self.waiting:
@@ -635,8 +749,10 @@ class ServingEngine:
                            else self.caches._replace(kv=kv0))
             else:
                 caches0 = self.caches
-            tok_ids, new_caches = self._prefill(self.params, batch,
-                                                caches0)
+            with self.tracer.span("prefill", slot=slot, uid=req.uid,
+                                  prompt_len=lp):
+                tok_ids, new_caches = self._prefill(self.params, batch,
+                                                    caches0)
             self.caches = merge_rows(self.cfg, new_caches, self.caches,
                                      row_mask)
             first = int(np.asarray(tok_ids)[slot])
@@ -760,22 +876,46 @@ class ServingEngine:
         self._mega = jax.jit(mega, donate_argnums=(1, 2, 3))
 
     def launches_per_tick(self) -> int:
-        """``pallas_call`` launch count of ONE fused decode tick, read
-        off the mega-step jaxpr (kernels/ops.count_pallas_calls — the
-        same counter as the per-transaction and per-wave proofs).
-        Constant in ``max_batch`` by construction: the tick is one
-        jitted program and the grow transaction rides a single kernel.
-        Recorded into ``stats["launches_per_tick"]``; benchmarks/
+        """``pallas_call`` launch count of ONE decode tick, read off
+        the jaxprs (kernels/ops.count_pallas_calls — the same counter
+        as the per-transaction and per-wave proofs).  Mega-step mode
+        counts the single fused tick program; host mode counts the
+        jitted decode plus the bulk-grow transaction issued around it
+        (the same two programs ``_step_host`` dispatches).  Constant
+        in ``max_batch`` by construction either way.  Recorded into
+        ``stats["launches_per_tick"]``; benchmarks/
         common.launches_per_tick delegates here so fig8 records and
         engine stats can never disagree."""
-        if not self.mega_step:
-            raise ValueError("launches_per_tick requires mega_step=True")
-        if self._mega is None:
-            self._build_mega()
         from repro.kernels.ops import count_pallas_calls
-        jx = jax.make_jaxpr(self._mega_fn)(
-            self.params, self.alloc_state, self.caches, self.mega_state)
-        n = count_pallas_calls(jx)
+        if self.mega_step:
+            if self._mega is None:
+                self._build_mega()
+            jx = jax.make_jaxpr(self._mega_fn)(
+                self.params, self.alloc_state, self.caches,
+                self.mega_state)
+            n = count_pallas_calls(jx)
+        else:
+            toks = jnp.zeros((self.max_batch, 1), jnp.int32)
+            jx = jax.make_jaxpr(
+                lambda p, t, c: self.model.decode_step(
+                    p, t, c, dtype=self.compute_dtype))(
+                self.params, toks, self.caches)
+            n = count_pallas_calls(jx)
+            # the per-tick bulk grow (_bulk_alloc lane shapes)
+            lanes = self.max_batch * 2
+            sizes = jnp.full(lanes, self.page_bytes, jnp.int32)
+            mask = jnp.arange(lanes) < 1
+            if self.num_shards > 1:
+                jx2 = jax.make_jaxpr(
+                    lambda st, sz, m, h: self.ouro.alloc(
+                        st, sz, m, shard_hint=h))(
+                    self.alloc_state, sizes, mask,
+                    jnp.zeros(lanes, jnp.int32))
+            else:
+                jx2 = jax.make_jaxpr(
+                    lambda st, sz, m: self.ouro.alloc(st, sz, m))(
+                    self.alloc_state, sizes, mask)
+            n += count_pallas_calls(jx2)
         self.stats["launches_per_tick"] = n
         return n
 
@@ -961,7 +1101,8 @@ class ServingEngine:
         identical stream (greedy decode is deterministic), so one
         oversized burst degrades throughput instead of killing the
         server.  Counted in ``stats["evictions"]``."""
-        req = self._drop_slot(slot)
+        with self.tracer.span("eviction", slot=slot):
+            req = self._drop_slot(slot)
         req.out_tokens = []
         req.done = False
         self.waiting.insert(0, req)
@@ -987,11 +1128,13 @@ class ServingEngine:
             if r.uid == uid:
                 self.waiting.pop(i)
                 self.stats["cancels"] += 1
+                self.tracer.instant("cancel", uid=uid, where="waiting")
                 return True
         for slot in range(self.max_batch):
             r = self.slot_req[slot]
             if r is not None and r.uid == uid:
-                self._drop_slot(slot)
+                with self.tracer.span("cancel", uid=uid, slot=slot):
+                    self._drop_slot(slot)
                 self.stats["cancels"] += 1
                 return True
         return False
@@ -1060,13 +1203,28 @@ class ServingEngine:
     def step(self) -> List[Request]:
         """Admit, decode one token for all active slots (fused
         mega-step or host loop), retire finished requests.  Returns
-        requests finished this step."""
-        self._admit()
+        requests finished this step.
+
+        The whole step is one ``tick`` trace span whose category —
+        ``"compile"`` when any engine jit traced this step,
+        ``"steady"`` otherwise — is resolved at close from the jit
+        cache sizes; ``last_tick_compiled`` exposes the same signal to
+        the replay harness (DESIGN.md §14)."""
+        ts = self.tracer.begin()
+        pre = self._compile_count()
+        with self.tracer.span("admission"):
+            self._admit()
         self._maybe_rebalance()
         finished = (self._step_mega() if self.mega_step
                     else self._step_host())
         self.stats["steps"] += 1
         self._maybe_auto_defrag()
+        grew = self._compile_count() - pre
+        self.stats["jit_first_calls"] += grew
+        self.last_tick_compiled = grew > 0
+        self.tracer.complete(
+            "tick", ts, cat="compile" if grew > 0 else "steady",
+            step=self.stats["steps"], finished=len(finished))
         return finished
 
     def _release(self, slot: int):
@@ -1170,16 +1328,18 @@ class ServingEngine:
         fingerprint ride the ``meta.json`` sidecar) and returns the
         committed path; otherwise returns the in-memory snapshot dict
         ``{"tree", "meta"}`` that :meth:`restore` accepts directly."""
-        meta = self._snapshot_meta()
-        if directory is not None:
-            from repro.ckpt import checkpoint as CK
-            return CK.save(self._snapshot_tree(), directory,
-                           step=self.stats["steps"] if step is None
-                           else step,
-                           keep=keep, extra=meta)
-        tree = jax.tree.map(lambda x: np.array(jax.device_get(x)),
-                            self._snapshot_tree())
-        return {"tree": tree, "meta": meta}
+        with self.tracer.span("snapshot",
+                              to_disk=directory is not None):
+            meta = self._snapshot_meta()
+            if directory is not None:
+                from repro.ckpt import checkpoint as CK
+                return CK.save(self._snapshot_tree(), directory,
+                               step=self.stats["steps"] if step is None
+                               else step,
+                               keep=keep, extra=meta)
+            tree = jax.tree.map(lambda x: np.array(jax.device_get(x)),
+                                self._snapshot_tree())
+            return {"tree": tree, "meta": meta}
 
     def restore(self, source, step: Optional[int] = None):
         """Load a snapshot taken by :meth:`snapshot` — an in-memory
@@ -1193,22 +1353,25 @@ class ServingEngine:
         resumes token-identically for every in-flight sequence.
         Returns the restored checkpoint step (None for in-memory
         snapshots)."""
-        if isinstance(source, str):
-            from repro.ckpt import checkpoint as CK
-            meta_rec, s = CK.read_meta(source, step)
-            meta = meta_rec.get("extra")
-            if meta is None or "fingerprint" not in meta:
-                raise ValueError(
-                    f"checkpoint step {s} under {source!r} is not a "
-                    f"serving-engine snapshot (no fingerprint sidecar)")
+        with self.tracer.span("restore"):
+            if isinstance(source, str):
+                from repro.ckpt import checkpoint as CK
+                meta_rec, s = CK.read_meta(source, step)
+                meta = meta_rec.get("extra")
+                if meta is None or "fingerprint" not in meta:
+                    raise ValueError(
+                        f"checkpoint step {s} under {source!r} is not "
+                        f"a serving-engine snapshot (no fingerprint "
+                        f"sidecar)")
+                self._validate_fingerprint(meta["fingerprint"])
+                tree, s = CK.restore(self._snapshot_tree(), source,
+                                     step=s)
+                self._apply_snapshot(tree, meta)
+                return s
+            meta = source["meta"]
             self._validate_fingerprint(meta["fingerprint"])
-            tree, s = CK.restore(self._snapshot_tree(), source, step=s)
-            self._apply_snapshot(tree, meta)
-            return s
-        meta = source["meta"]
-        self._validate_fingerprint(meta["fingerprint"])
-        self._apply_snapshot(source["tree"], meta)
-        return None
+            self._apply_snapshot(source["tree"], meta)
+            return None
 
     def _validate_fingerprint(self, fp: dict):
         mine = self.snapshot_fingerprint()
@@ -1268,7 +1431,7 @@ class ServingEngine:
         identity = {"arena_mem_words", "arena_ctl_words",
                     "alloc_backend", "alloc_lowering", "num_shards",
                     "mega_step", "launches_per_tick",
-                    "aux_pages_per_slot"}
+                    "aux_pages_per_slot", "jit_first_calls"}
         for k, v in meta["stats"].items():
             if k in self.stats and k not in identity:
                 self.stats[k] = v

@@ -173,16 +173,30 @@ class ReplayResult:
     tick_ms: List[float]            # wall-clock per engine step
     queue_wait: Dict[int, int]      # uid → steps arrival → admission
     stats: dict                     # engine stats at drain
+    compiled: List[bool] = dataclasses.field(default_factory=list)
+    # ^ per tick: did this step pay a jit first-call?  (engine
+    #   last_tick_compiled — DESIGN.md §14)
 
     def summary(self) -> dict:
         """The per-scenario telemetry cell appended (as ``replay``
         records) to BENCH_serve.json — p50/p99 tick latency and queue
         wait, completion/abandonment counts, and the allocator's
-        fragmentation/defrag trajectory."""
+        fragmentation/defrag trajectory.
+
+        Compile pollution is split out, not blended in: ticks that
+        paid a jit first-call (trace+compile — seconds on a
+        microsecond-scale loop) are summed into ``compile_ms`` and
+        excluded from the ``*_steady`` percentiles.  The unsplit
+        ``tick_ms_p50``/``p99`` keep their historical all-ticks
+        meaning, so pre-split BENCH_serve records remain comparable."""
         s = self.stats
         waits = list(self.queue_wait.values()) or [0]
         frag = s["frag_ratio"]
         frag = max(frag) if isinstance(frag, list) else frag
+        flags = (self.compiled if len(self.compiled) == len(self.tick_ms)
+                 else [False] * len(self.tick_ms))
+        steady = [ms for ms, c in zip(self.tick_ms, flags) if not c]
+        steady = steady or list(self.tick_ms)   # all-compile fallback
         return {
             "scenario": self.scenario,
             "arch": self.arch,
@@ -194,6 +208,10 @@ class ReplayResult:
             "tokens": sum(len(t) for t in self.tokens.values()),
             "tick_ms_p50": float(np.percentile(self.tick_ms, 50)),
             "tick_ms_p99": float(np.percentile(self.tick_ms, 99)),
+            "compile_ms": float(sum(
+                ms for ms, c in zip(self.tick_ms, flags) if c)),
+            "tick_ms_p50_steady": float(np.percentile(steady, 50)),
+            "tick_ms_p99_steady": float(np.percentile(steady, 99)),
             "queue_wait_p50": float(np.percentile(waits, 50)),
             "queue_wait_p99": float(np.percentile(waits, 99)),
             "evictions": s["evictions"],
@@ -222,6 +240,7 @@ def replay(engine, trace: List[TraceItem], *, scenario: str = "",
     tokens: Dict[int, List[int]] = {}
     cancelled: List[int] = []
     tick_ms: List[float] = []
+    compiled: List[bool] = []
     next_i = 0
     t = 0
     while t < max_steps:
@@ -241,6 +260,8 @@ def replay(engine, trace: List[TraceItem], *, scenario: str = "",
         t0 = time.perf_counter()
         done = engine.step()
         tick_ms.append(1e3 * (time.perf_counter() - t0))
+        compiled.append(bool(getattr(engine, "last_tick_compiled",
+                                     False)))
         for slot in range(engine.max_batch):
             r = engine.slot_req[slot]
             if r is not None and r.uid not in admitted:
@@ -267,7 +288,8 @@ def replay(engine, trace: List[TraceItem], *, scenario: str = "",
         steps=t,
         tick_ms=tick_ms,
         queue_wait={u: admitted[u] - arrived[u] for u in admitted},
-        stats=dict(engine.stats))
+        stats=dict(engine.stats),
+        compiled=compiled)
 
 
 def assert_conserved(engine):

@@ -52,6 +52,14 @@ def pytest_configure(config):
         "DESIGN.md §13; the forced-blocked CI job runs this marker, "
         "and the nightly job adds the two-scenario fig9 benchmark "
         "smoke)")
+    config.addinivalue_line(
+        "markers",
+        "obs: exercises the observability layer — in-kernel allocator "
+        "telemetry word parity across lowerings, the metrics registry "
+        "and Prometheus exposition, and the engine trace spans "
+        "(obs/, DESIGN.md §14; the forced-blocked CI job runs this "
+        "marker, and the nightly job validates the replay-emitted "
+        "trace + metrics artifacts with scripts/obs_dump.py)")
 
 
 def pytest_collection_modifyitems(config, items):

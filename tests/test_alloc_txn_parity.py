@@ -36,6 +36,8 @@ asserted for the sharded grids of BOTH lowerings.
 ``--runslow`` unlocks the long replays (more ops, more seeds, both
 configs × all six variants) that the scheduled CI job runs nightly.
 """
+import functools
+
 import numpy as np
 import pytest
 
@@ -88,7 +90,8 @@ def _replay(variant, seed, cfg=CFG, sizes_menu=SIZES, ops=OPS):
     sps = [o.init() for o in ops_p]
     for lw, sp in zip(LOWERINGS, sps):
         _assert_state_equal(f"{variant}/{lw}", "init", sj, sp)
-    pool_ctr0 = np.asarray(sj.ctl)[-2:].copy()
+    pool_sl = slice(oj.layout.off_pool_front, oj.layout.off_pool_back + 1)
+    pool_ctr0 = np.asarray(sj.ctl)[pool_sl].copy()
     pool_moved = False
 
     live = []  # (offset, size) granted and not yet freed
@@ -138,7 +141,7 @@ def _replay(variant, seed, cfg=CFG, sizes_menu=SIZES, ops=OPS):
         for lw, sp in zip(LOWERINGS, sps):
             _assert_state_equal(f"{variant}/{lw}", step, sj, sp)
         pool_moved |= bool(
-            (np.asarray(sj.ctl)[-2:] != pool_ctr0).any())
+            (np.asarray(sj.ctl)[pool_sl] != pool_ctr0).any())
     return pool_moved
 
 
@@ -258,6 +261,13 @@ SHARD_SEEDS = (0,)
 SHARD_OPS = 5
 
 
+@functools.partial(jax.jit, static_argnums=(0, 1, 2))
+def _oracle_alloc_math(cfg, kind, family, mem, ctl, sizes, sel, attempt):
+    from repro.core import transactions
+    return transactions.alloc_math(cfg, kind, family, mem, ctl,
+                                   sizes, sel, attempt=attempt)
+
+
 class SerialShardOracle:
     """S independent single-shard jnp allocators replayed serially."""
 
@@ -276,9 +286,18 @@ class SerialShardOracle:
         for a in range(self.walk + 1):
             for s in range(self.S):
                 sel = mask & ((home + a) % self.S == s) & (offs < 0)
-                st, local = self.ouro.alloc(self.states[s], sizes,
-                                            jnp.asarray(sel))
-                self.states[s] = st
+                st = self.states[s]
+                # alloc_math directly (not Ouroboros.alloc) so the
+                # walk-depth telemetry histogram attributes served
+                # lanes to attempt a, as the sharded impls do; jitted
+                # (attempt traced) so the chunk-claim while_loop
+                # compiles inside one program, as every production
+                # caller of the math does
+                mem2, ctl2, local = _oracle_alloc_math(
+                    self.scfg, self.ouro.kind, self.ouro.family,
+                    st.mem, st.ctl, sizes, jnp.asarray(sel),
+                    jnp.asarray(a, jnp.int32))
+                self.states[s] = st._replace(mem=mem2, ctl=ctl2)
                 local = np.asarray(local)
                 offs = np.where(sel & (local >= 0),
                                 s * self.Ws + local, offs)

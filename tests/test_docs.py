@@ -190,3 +190,48 @@ def test_design_s13_pins_serve_record_schema():
     for key in REPLAY_CELL_KEYS:
         assert f"`{key}`" in sec, (
             f"DESIGN.md §13 lost replay telemetry key {key!r}")
+
+
+# ---- DESIGN.md §14: the observability layer --------------------------------
+
+def test_design_s14_telemetry_word_table_matches_live_layout():
+    """§14's telemetry word table is a ``describe()`` rendering for
+    the §7 test config; re-render and require every telemetry ctl
+    line verbatim, so the documented offsets track
+    ``ArenaLayout.tele_fields()`` exactly."""
+    sec = DOC.read_text().split("## §14")[1].split("\n## §")[0]
+    lay = arena.layout(CFG, "page", "ring")
+    tele_lines = [ln for ln in lay.describe().splitlines()
+                  if any(f"  {name}" in ln
+                         for name, _, _ in lay.tele_fields())]
+    assert len(tele_lines) == len(lay.tele_fields())
+    for ln in tele_lines:
+        assert ln in sec, (
+            f"DESIGN.md §14 drifted from the live telemetry layout: "
+            f"{ln!r}")
+    # every field is prose-documented too
+    for name, _, _ in lay.tele_fields():
+        assert f"`{name}" in sec, f"DESIGN.md §14 lost field {name!r}"
+
+
+def test_design_s14_span_taxonomy_and_metric_names_documented():
+    """The §14 span taxonomy must list ``trace.PHASES`` verbatim and
+    the metric family names the engine publishes must appear, so
+    dashboards built from the doc match the live exposition."""
+    from repro.obs.trace import PHASES
+
+    sec = DOC.read_text().split("## §14")[1].split("\n## §")[0]
+    for phase in PHASES:
+        assert f'"{phase}"' in sec, f"DESIGN.md §14 lost span {phase!r}"
+    for fam in ("repro_alloc_granted_total", "repro_free_total",
+                "repro_alloc_failed_total", "repro_ring_wrap_total",
+                "repro_segment_grow_total", "repro_segment_shrink_total",
+                "repro_pool_wrap_total",
+                "repro_overflow_walk_served_total",
+                "repro_arena_frag_ratio", "repro_step_time_ms"):
+        assert fam in sec, f"DESIGN.md §14 lost metric family {fam!r}"
+    for needle in ("validate_exposition", "require_phases=True",
+                   "--metrics-file", "--trace-file", "obs_dump",
+                   "jit_first_calls", "drain_telemetry",
+                   "publish_metrics"):
+        assert needle in sec, f"DESIGN.md §14 lost {needle!r}"

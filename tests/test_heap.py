@@ -117,4 +117,8 @@ def test_arena_layout_regions_are_contiguous_and_disjoint():
                 assert r.offset == pos, f"{kind}/{family}: gap at {r.name}"
                 pos = r.end
             assert pos == lay.mem_words
-            assert lay.ctl_words == 4 * CFG.num_classes + 2
+            assert lay.core_ctl_words == 4 * CFG.num_classes + 2
+            assert lay.ctl_words == (lay.core_ctl_words
+                                     + lay.tele_words)
+            assert lay.tele_words == (4 * CFG.num_classes + 3
+                                      + arena.TELE_WALK_BINS)

@@ -231,3 +231,53 @@ def test_snapshot_carries_queue_and_eviction_stats(tiny_model):
         [r and r.uid for r in eng.slot_req]
     got = _toks(dst.run_until_done(300))
     assert sorted(got) == list(range(1, 7))
+
+
+# ---- observability state rides in the snapshot (DESIGN.md §14) ------------
+
+@pytest.mark.obs
+def test_snapshot_roundtrips_telemetry_and_metrics(tiny_model):
+    """The in-kernel telemetry words are ordinary ctl words, so a
+    restored engine drains word-identical accumulators — and a metrics
+    registry publishing from the restored engine reports the same
+    counter totals as one publishing from the source.  The telemetry
+    is non-trivial by the time we snapshot (allocs have happened), so
+    this is not an all-zeros comparison."""
+    cfg = tiny_model[0]
+    src = _engine(tiny_model)
+    _submit(src, cfg)
+    for _ in range(3):
+        src.step()
+    tele_src = src.drain_telemetry()
+    assert int(np.asarray(tele_src["t_alloc"]).sum()) > 0
+    snap = src.snapshot()
+
+    dst = _engine(tiny_model)
+    dst.restore(snap)
+    tele_dst = dst.drain_telemetry()
+    assert sorted(tele_src) == sorted(tele_dst)
+    for field in tele_src:
+        np.testing.assert_array_equal(
+            np.asarray(tele_src[field]), np.asarray(tele_dst[field]),
+            err_msg=f"telemetry {field} not restored word-for-word")
+
+    from repro.obs.metrics import MetricsRegistry, validate_exposition
+    text_src = src.publish_metrics(MetricsRegistry()).to_prometheus()
+    text_dst = dst.publish_metrics(MetricsRegistry()).to_prometheus()
+    validate_exposition(text_src)
+
+    def totals(text, keep):
+        return sorted(l for l in text.splitlines()
+                      if l.startswith(keep))
+    for fam in ("repro_alloc_granted_total", "repro_free_total",
+                "repro_alloc_failed_total", "repro_engine_allocs_total",
+                "repro_engine_steps_total"):
+        assert totals(text_src, fam) == totals(text_dst, fam), (
+            f"{fam} diverged across snapshot/restore")
+
+    # the restored stream continues token-identically with telemetry
+    # still accumulating monotonically
+    dst.run_until_done(300)
+    tele_after = dst.drain_telemetry()
+    assert int(np.asarray(tele_after["t_alloc"]).sum()) >= \
+        int(np.asarray(tele_dst["t_alloc"]).sum())
